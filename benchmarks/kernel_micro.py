@@ -1,0 +1,97 @@
+"""Kernel micro-benchmarks.
+
+This container is CPU-only, so wall-clock numbers time the jitted pure-jnp
+reference path (the math the Pallas kernels implement); the Pallas kernels
+themselves are validated in interpret mode in tests and their VMEM/MXU
+tiling is assessed structurally in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_micro():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention ref path
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    b, s, h, hkv, d = 1, 512, 8, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v))
+    us = _time(f, q, k, v)
+    flops = 4 * b * s * s * h * d / 2
+    rows.append({"name": "flash_attention_ref_512", "us_per_call": round(us, 1),
+                 "derived": f"{flops/us/1e3:.1f} GFLOP/s-cpu"})
+
+    # paged decode
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    bb, hkv2, g, d2, n, page, p = 8, 4, 4, 64, 64, 16, 16
+    q2 = jnp.asarray(rng.standard_normal((bb, hkv2, g, d2)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n, page, hkv2, d2)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n, page, hkv2, d2)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, n, (bb, p)), jnp.int32)
+    lens = jnp.full((bb,), p * page, jnp.int32)
+    f2 = jax.jit(lambda *a: paged_decode_attention_ref(*a))
+    us = _time(f2, q2, kp, vp, tbl, lens)
+    rows.append({"name": "paged_decode_ref_b8_kv256", "us_per_call":
+                 round(us, 1), "derived": f"{bb/(us/1e6):.0f} tok/s-cpu"})
+
+    # rg_lru
+    from repro.kernels.rg_lru.ref import rg_lru_ref
+    a = jnp.asarray(rng.uniform(0.9, 0.999, (4, 256, 512)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, 256, 512)), jnp.float32)
+    h0 = jnp.zeros((4, 512), jnp.float32)
+    f3 = jax.jit(lambda *args: rg_lru_ref(*args))
+    us = _time(f3, a, x, h0)
+    rows.append({"name": "rg_lru_ref_s256_w512", "us_per_call": round(us, 1),
+                 "derived": f"{4*256*512/(us/1e6)/1e6:.0f} Melt/s-cpu"})
+
+    # mlstm chunkwise
+    from repro.models.xlstm import mlstm_chunkwise
+    b3, s3, h3, dk, dv = 2, 256, 4, 32, 64
+    q3 = jnp.asarray(rng.standard_normal((b3, s3, h3, dk)), jnp.float32)
+    k3 = jnp.asarray(rng.standard_normal((b3, s3, h3, dk)), jnp.float32)
+    v3 = jnp.asarray(rng.standard_normal((b3, s3, h3, dv)), jnp.float32)
+    li = jnp.asarray(rng.standard_normal((b3, s3, h3)), jnp.float32)
+    lf = jnp.log(jax.nn.sigmoid(
+        jnp.asarray(rng.standard_normal((b3, s3, h3)) + 2, jnp.float32)))
+    f4 = jax.jit(lambda *args: mlstm_chunkwise(*args)[0])
+    us = _time(f4, q3, k3, v3, li, lf)
+    rows.append({"name": "mlstm_chunkwise_s256", "us_per_call": round(us, 1),
+                 "derived": f"{b3*s3/(us/1e6)/1e3:.0f} ktok/s-cpu"})
+
+    # simulator throughput (requests/second through the DES)
+    from repro.core import baselines as BL
+    from repro.core import workloads as WL
+    from repro.core.simulator import SimParams, simulate
+    spec = WL.WORKLOADS["BP"]
+    tr = WL.generate(spec, seed=0)
+    args = (jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+            jnp.asarray(tr["compute_gap"]))
+    kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr,
+              prm=SimParams(), pol=BL.MEDIC)
+    simulate(*args, **kw)["ipc"].block_until_ready()
+    t0 = time.perf_counter()
+    simulate(*args, **kw)["ipc"].block_until_ready()
+    dt = time.perf_counter() - t0
+    nreq = int((tr["lines"] >= 0).sum())
+    rows.append({"name": "simulator_des", "us_per_call": round(dt * 1e6, 0),
+                 "derived": f"{nreq/dt/1e3:.0f} kreq/s"})
+    return rows, {}

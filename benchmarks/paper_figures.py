@@ -1,0 +1,143 @@
+"""One benchmark per paper artefact (Figs 2/4/5/7/8) on the altitude-A
+simulator, plus the altitude-B serving A/B and kernel micro-benchmarks.
+
+Each function returns (rows, derived) where rows are CSV-able dicts.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as BL
+from repro.core import workloads as WL
+from repro.core.simulator import Policy, SimParams, simulate
+
+PRM = SimParams()
+_CACHE: Dict[Tuple[str, str, int], dict] = {}
+
+
+def _run(workload: str, pol: Policy, seed: int = 0) -> dict:
+    key = (workload, pol.name, seed)
+    if key not in _CACHE:
+        spec = WL.WORKLOADS[workload]
+        tr = WL.generate(spec, seed=seed)
+        t0 = time.perf_counter()
+        out = simulate(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+                       jnp.asarray(tr["compute_gap"]),
+                       n_warps=spec.n_warps, lanes=spec.lines_per_instr,
+                       prm=PRM, pol=pol)
+        out = {k: np.asarray(v) for k, v in out.items()}
+        out["wall_s"] = time.perf_counter() - t0
+        out["trace"] = tr
+        _CACHE[key] = out
+    return _CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# Fig 2 — inter-warp hit-ratio heterogeneity
+# ---------------------------------------------------------------------------
+
+def fig2_heterogeneity(workloads=("BFS", "BP", "CONS")):
+    rows = []
+    for wl in workloads:
+        out = _run(wl, BL.BASELINE)
+        hr = out["warp_hit_ratio"]
+        hist, edges = np.histogram(hr, bins=np.linspace(0, 1, 11))
+        for lo, hi, n in zip(edges[:-1], edges[1:], hist):
+            rows.append({"workload": wl, "hit_ratio_bin": f"{lo:.1f}-{hi:.1f}",
+                         "n_warps": int(n)})
+    spread = {wl: float(_run(wl, BL.BASELINE)["warp_hit_ratio"].std())
+              for wl in workloads}
+    return rows, {"hit_ratio_stddev": spread}
+
+
+# ---------------------------------------------------------------------------
+# Fig 4 — divergence stability over time
+# ---------------------------------------------------------------------------
+
+def fig4_stability(workload="BFS"):
+    out = _run(workload, BL.BASELINE)
+    rt = out["ratio_over_time"]          # [I, W]
+    half = rt.shape[0] // 2
+    a = rt[half - 8:half].mean(axis=0)
+    b = rt[-8:].mean(axis=0)
+    corr = float(np.corrcoef(a, b)[0, 1])
+    rows = [{"workload": workload, "warp": int(w),
+             "ratio_mid": float(a[w]), "ratio_end": float(b[w])}
+            for w in range(0, rt.shape[1], 6)]
+    return rows, {"half_to_half_correlation": corr}
+
+
+# ---------------------------------------------------------------------------
+# Fig 5 — L2 queueing-latency distribution
+# ---------------------------------------------------------------------------
+
+def fig5_queueing(workload="BFS"):
+    out = _run(workload, BL.BASELINE)
+    hist = out["qdelay_hist"]
+    bins = ["0", "1", "2-3", "4-7", "8-15", "16-31", "32-63", "64-127",
+            "128-255", "256-511", "512-1023", "1024+"]
+    rows = [{"workload": workload, "queue_cycles": b, "requests": int(n)}
+            for b, n in zip(bins, hist)]
+    return rows, {"mean_qdelay_cycles": float(out["mean_qdelay"]),
+                  "frac_over_64_cycles":
+                      float(hist[7:].sum() / max(hist.sum(), 1))}
+
+
+# ---------------------------------------------------------------------------
+# Fig 7 — performance of MeDiC vs all baselines over 15 workloads
+# ---------------------------------------------------------------------------
+
+def fig7_performance(workloads=WL.WORKLOAD_NAMES):
+    policies = list(BL.ALL_NAMED)
+    rows = []
+    speedups: Dict[str, List[float]] = {p.name: [] for p in policies}
+    speedups["Rand(ideal)"] = []
+    for wl in workloads:
+        base = float(_run(wl, BL.BASELINE)["ipc"])
+        for pol in policies:
+            ipc = float(_run(wl, pol)["ipc"])
+            s = ipc / base
+            speedups[pol.name].append(s)
+            rows.append({"workload": wl, "policy": pol.name,
+                         "speedup": round(s, 4)})
+        # idealized Rand: best bypass probability per workload (paper fn.3)
+        best = max(float(_run(wl, BL.rand(p))["ipc"]) / base
+                   for p in (0.25, 0.5, 0.75))
+        speedups["Rand(ideal)"].append(best)
+        rows.append({"workload": wl, "policy": "Rand(ideal)",
+                     "speedup": round(best, 4)})
+
+    def hmean(xs):
+        xs = np.asarray(xs)
+        return float(len(xs) / np.sum(1.0 / xs))
+
+    derived = {f"hmean_speedup[{k}]": round(hmean(v), 4)
+               for k, v in speedups.items()}
+    derived["medic_vs_best_prior"] = round(
+        hmean(speedups["MeDiC"]) / max(hmean(speedups["PCAL"]),
+                                       hmean(speedups["EAF"]),
+                                       hmean(speedups["PC-Byp"])), 4)
+    return rows, derived
+
+
+# ---------------------------------------------------------------------------
+# Fig 8 — energy efficiency
+# ---------------------------------------------------------------------------
+
+def fig8_energy(workloads=WL.WORKLOAD_NAMES):
+    rows = []
+    ratios = []
+    for wl in workloads:
+        base = float(_run(wl, BL.BASELINE)["perf_per_energy"])
+        med = float(_run(wl, BL.MEDIC)["perf_per_energy"])
+        rows.append({"workload": wl, "policy": "MeDiC",
+                     "perf_per_energy_vs_base": round(med / base, 4)})
+        ratios.append(med / base)
+    n = len(ratios)
+    return rows, {"hmean_energy_eff_gain":
+                  round(float(n / np.sum(1.0 / np.asarray(ratios))), 4)}

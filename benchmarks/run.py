@@ -1,0 +1,62 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark plus the derived
+headline numbers (harmonic-mean speedups etc.). Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(name, rows, derived):
+    print(f"\n## {name}")
+    if rows:
+        keys = list(rows[0].keys())
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    for k, v in derived.items():
+        print(f"derived,{name}.{k},{v}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of workloads for a fast pass")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import kernel_micro, paper_figures, serving_ab
+    from repro.core import workloads as WL
+
+    wls = ("BFS", "SSSP", "BP", "CONS") if args.quick else WL.WORKLOAD_NAMES
+
+    benches = {
+        "fig2_heterogeneity": lambda: paper_figures.fig2_heterogeneity(),
+        "fig4_stability": lambda: paper_figures.fig4_stability(),
+        "fig5_queueing": lambda: paper_figures.fig5_queueing(),
+        "fig7_performance": lambda: paper_figures.fig7_performance(wls),
+        "fig8_energy": lambda: paper_figures.fig8_energy(wls),
+        "serving_ab": serving_ab.serving_ab,
+        "kernel_micro": kernel_micro.kernel_micro,
+    }
+    t00 = time.time()
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        rows, derived = fn()
+        us = (time.time() - t0) * 1e6
+        print(f"{name},{us:.0f},rows={len(rows)}")
+        _emit(name, rows, derived)
+        sys.stdout.flush()
+    print(f"\ntotal_wall_s,{time.time()-t00:.1f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Altitude-B benchmark: MeDiC pool manager vs LRU on the serving engine."""
+from __future__ import annotations
+
+from repro.configs.base import get_config
+from repro.serving.engine import EngineConfig, run_ab
+from repro.serving.pool import PoolConfig
+from repro.serving.request import ServeWorkload
+
+
+def serving_ab():
+    cfg = get_config("qwen3_1_7b").reduced(num_layers=2)
+    wl = ServeWorkload(n_requests=24)
+    pool = PoolConfig(budget_blocks=48, block_tokens=16)
+    out = run_ab(cfg, wl, pool, EngineConfig(max_slots=4, max_len=448),
+                 seed=0)
+    rows = []
+    for policy in ("lru", "medic"):
+        s = out[policy]
+        rows.append({
+            "policy": policy,
+            "throughput_tok_per_step": round(s["throughput"], 4),
+            "completed": s["completed"],
+            "mean_latency_steps": round(s["mean_latency"], 1),
+            "mean_ttft_steps": round(s["mean_ttft"], 1),
+            "mean_fetch_qdelay": round(s["mean_qdelay"], 2),
+            "p99_fetch_qdelay": round(s["p99_qdelay"], 2),
+            "bypassed_blocks": int(s["bypassed_blocks"]),
+            "stall_steps": int(s["stall_steps"]),
+        })
+    derived = {
+        "medic_throughput_gain": round(
+            out["medic"]["throughput"] / max(out["lru"]["throughput"], 1e-9),
+            3),
+    }
+    return rows, derived

@@ -1,0 +1,153 @@
+"""Sharded, atomic, async checkpointing with auto-resume and re-shard.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json  (+ .tmp staging)
+
+Properties needed at 1000-node scale, implemented here single-process with
+the same structure:
+  * atomic publish — writes go to ``step_N.tmp`` and are renamed only after
+    fsync, so a killed writer never corrupts the latest checkpoint;
+  * async save — a background thread serializes device arrays that were
+    snapshotted (host-copied) at save() call time, so the train loop
+    resumes immediately;
+  * mesh-agnostic restore — arrays are stored unsharded-logical and pushed
+    onto the target sharding at load (``device_put`` with NamedSharding),
+    so a checkpoint taken on one mesh restores on any other (elastic
+    re-scale path; exercised in tests with different device counts);
+  * retention — keep the last ``keep`` checkpoints, delete older.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
+    """Flatten to numpy; bfloat16 is stored as a uint16 view (npz-safe)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out, dtypes = {}, {}
+    for path, leaf in flat:
+        key = SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.name == "bfloat16":
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out, dtypes
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray],
+               dtypes: Dict[str, str]):
+    import ml_dtypes
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = SEP.join(_path_str(p) for p in path)
+        arr = flat[key]
+        if dtypes.get(key) == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             block: bool = False):
+        # snapshot to host synchronously (cheap vs serialization)
+        flat, dtypes = _flatten(tree)
+        extra = dict(extra or {})
+        self.wait()
+
+        def _write():
+            tmp = os.path.join(self.directory, f"step_{step}.tmp")
+            final = os.path.join(self.directory, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "extra": extra,
+                           "dtypes": dtypes, "keys": sorted(flat)}, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- load -----------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Any,
+                shardings: Any = None) -> Tuple[Any, Dict]:
+        path = os.path.join(self.directory, f"step_{step}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        tree = _unflatten(template, flat, manifest.get("dtypes", {}))
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        else:
+            tree = jax.tree.map(lambda a: jax.numpy.asarray(a), tree)
+        return tree, manifest["extra"]
+
+    def restore_latest(self, template: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = self.restore(step, template, shardings)
+        return step, tree, extra

@@ -1,0 +1,24 @@
+"""Policy presets: MeDiC, its three components, and the four comparison
+mechanisms from the paper's evaluation (§5, Fig 7)."""
+from __future__ import annotations
+
+from repro.core.simulator import Policy
+
+BASELINE = Policy("Baseline")                                     # LRU, FR-FCFS
+EAF = Policy("EAF", insertion="eaf")                              # [123]
+PCAL = Policy("PCAL", bypass="pcal")                              # [79]
+PC_BYP = Policy("PC-Byp", bypass="pcbyp")
+WIP = Policy("WIP", insertion="medic")                            # ③ alone
+WMS = Policy("WMS", scheduler="medic")                            # ④ alone
+WBYP = Policy("WByp", bypass="medic")                             # ② alone
+MEDIC = Policy("MeDiC", bypass="medic", insertion="medic",
+               scheduler="medic")                                 # ②+③+④
+
+
+def rand(p: float) -> Policy:
+    return Policy(f"Rand({p:.2f})", bypass="rand", rand_p=p)
+
+
+RAND_SWEEP = tuple(rand(p) for p in (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8))
+
+ALL_NAMED = (BASELINE, EAF, PCAL, PC_BYP, WIP, WMS, WBYP, MEDIC)

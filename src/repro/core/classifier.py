@@ -1,0 +1,86 @@
+"""Online warp-type identification (paper §3.1, mechanism ①).
+
+Hardware model: two counters per warp (hits, accesses) incremented at the
+shared cache, sampled every ``sampling_interval`` accesses; at each sampling
+boundary the warp's type is re-evaluated from the observed hit ratio and the
+counters reset. Between boundaries the warp keeps its last classification
+(paper observation O2: divergence behaviour is stable over long periods).
+
+Bypassed requests are counted as *misses* (they would have been: the warp
+was classified mostly/all-miss). To let a reformed warp escape the bypass
+class, a small fraction of bypassed requests is still probed through the
+cache lookup path (``probe_interval``), mirroring the paper's periodic
+resampling discussion.
+
+Everything is functional and vectorized over warps so both the altitude-A
+simulator and the altitude-B serving pool manager use the same code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import warp_types as WT
+
+
+class ClassifierState(NamedTuple):
+    hits: jnp.ndarray        # i32[W] hits in current sampling window
+    accesses: jnp.ndarray    # i32[W] accesses in current sampling window
+    warp_type: jnp.ndarray   # i32[W] current classification
+    ratio: jnp.ndarray       # f32[W] last sampled hit ratio
+
+
+def init(n_warps: int) -> ClassifierState:
+    return ClassifierState(
+        hits=jnp.zeros((n_warps,), jnp.int32),
+        accesses=jnp.zeros((n_warps,), jnp.int32),
+        warp_type=jnp.full((n_warps,), WT.BALANCED, jnp.int32),
+        ratio=jnp.full((n_warps,), 0.5, jnp.float32),
+    )
+
+
+def observe(state: ClassifierState, warp_id, is_hit, *,
+            sampling_interval: int = 256,
+            mostly_hit_threshold: float = 0.8,
+            mostly_miss_threshold: float = 0.2,
+            weight=None) -> ClassifierState:
+    """Record one (or a batch of) access outcome(s) and re-classify any warp
+    whose sampling window filled up.
+
+    warp_id: i32[] or i32[N]; is_hit: bool same shape.
+    """
+    warp_id = jnp.atleast_1d(warp_id)
+    is_hit = jnp.atleast_1d(is_hit).astype(jnp.int32)
+    if weight is None:
+        weight = jnp.ones_like(is_hit)
+    hits = state.hits.at[warp_id].add(is_hit * weight)
+    accesses = state.accesses.at[warp_id].add(weight)
+
+    due = accesses >= sampling_interval
+    ratio_now = hits.astype(jnp.float32) / jnp.maximum(accesses, 1)
+    new_type = WT.classify(ratio_now, accesses,
+                           mostly_hit_threshold=mostly_hit_threshold,
+                           mostly_miss_threshold=mostly_miss_threshold)
+    warp_type = jnp.where(due, new_type, state.warp_type)
+    ratio = jnp.where(due, ratio_now, state.ratio)
+    hits = jnp.where(due, 0, hits)
+    accesses = jnp.where(due, 0, accesses)
+    return ClassifierState(hits, accesses, warp_type, ratio)
+
+
+def force_classify(state: ClassifierState, *, mostly_hit_threshold=0.8,
+                   mostly_miss_threshold=0.2, min_samples: int = 1
+                   ) -> ClassifierState:
+    """Classify immediately from whatever counts exist (end-of-window)."""
+    ratio_now = state.hits.astype(jnp.float32) / jnp.maximum(state.accesses, 1)
+    new_type = WT.classify(ratio_now, state.accesses,
+                           mostly_hit_threshold=mostly_hit_threshold,
+                           mostly_miss_threshold=mostly_miss_threshold,
+                           min_samples=min_samples)
+    keep = state.accesses < min_samples
+    return ClassifierState(
+        state.hits, state.accesses,
+        jnp.where(keep, state.warp_type, new_type),
+        jnp.where(keep, state.ratio, ratio_now))

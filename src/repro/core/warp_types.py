@@ -1,0 +1,69 @@
+"""Warp-type taxonomy (paper Fig 3).
+
+Five types keyed by shared-cache hit ratio, sampled over an interval:
+
+    all-miss     ratio == 0
+    mostly-miss  0 < ratio <= mostly_miss_threshold   (paper: ~20%)
+    balanced     mmiss < ratio < mostly_hit_threshold
+    mostly-hit   mhit <= ratio < 1
+    all-hit      ratio == 1
+
+Codes are ordered so that *larger code == higher cache utility*, which lets
+the policies compare with a single threshold (e.g. bypass iff
+type <= MOSTLY_MISS, prioritize iff type >= MOSTLY_HIT).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ALL_MISS = 0
+MOSTLY_MISS = 1
+BALANCED = 2
+MOSTLY_HIT = 3
+ALL_HIT = 4
+
+NUM_TYPES = 5
+TYPE_NAMES = ("all-miss", "mostly-miss", "balanced", "mostly-hit", "all-hit")
+
+# epsilon so that e.g. 127/128 still counts as mostly-hit, not all-hit
+_EPS = 1e-6
+
+
+def classify(hit_ratio, accesses, *, mostly_hit_threshold: float = 0.8,
+             mostly_miss_threshold: float = 0.2, min_samples: int = 8):
+    """Vectorized hit-ratio -> warp-type. Unsampled warps default BALANCED.
+
+    hit_ratio: f32[...] in [0,1]; accesses: i32[...] sample counts.
+    """
+    r = hit_ratio
+    t = jnp.full(jnp.shape(r), BALANCED, jnp.int32)
+    t = jnp.where(r <= mostly_miss_threshold, MOSTLY_MISS, t)
+    t = jnp.where(r <= _EPS, ALL_MISS, t)
+    t = jnp.where(r >= mostly_hit_threshold, MOSTLY_HIT, t)
+    t = jnp.where(r >= 1.0 - _EPS, ALL_HIT, t)
+    return jnp.where(accesses >= min_samples, t,
+                     jnp.full_like(t, BALANCED))
+
+
+def is_bypass_type(warp_type):
+    """Mostly-miss and all-miss warps bypass the shared cache (paper §3.2)."""
+    return warp_type <= MOSTLY_MISS
+
+
+def is_priority_type(warp_type):
+    """Mostly-hit (and mischaracterized all-hit) requests take the
+    high-priority memory queue (paper §3.4)."""
+    return warp_type >= MOSTLY_HIT
+
+
+def insertion_rank(warp_type, max_rank: int = 3):
+    """Warp-type -> RRIP-style insertion rank (paper §3.3).
+
+    0 = insert at MRU (evict last) ... max_rank = insert at LRU (evict
+    first). all/mostly-hit -> 0, balanced -> max_rank-1, mostly/all-miss ->
+    max_rank.
+    """
+    r = jnp.full(jnp.shape(warp_type), max_rank, jnp.int32)
+    r = jnp.where(warp_type == BALANCED, max_rank - 1, r)
+    r = jnp.where(warp_type >= MOSTLY_HIT, 0, r)
+    return r

@@ -1,0 +1,111 @@
+"""Pallas TPU paged decode-attention kernel.
+
+The altitude-B hot loop: one decode token per sequence reads its KV blocks
+*directly out of the shared block pool* via the block table — the gather IS
+the cache lookup, so a pool "hit" never materializes a contiguous KV copy.
+
+TPU codesign notes:
+  * block table + sequence lengths ride in scalar-prefetch SMEM
+    (PrefetchScalarGridSpec) so BlockSpec index maps can chase the table:
+    the kv tile for grid step (b, h, j) is pool[tbl[b, j]] — a
+    data-dependent HBM->VMEM DMA, which is exactly the TPU analogue of the
+    paper's "request steered by the cache tag lookup";
+  * the page axis is the minormost (sequential) grid dimension; online-
+    softmax stats live in VMEM scratch across pages;
+  * non-resident pages (tbl < 0, the MeDiC bypass/evicted case) are skipped
+    with pl.when — no DMA is issued for them on hardware.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, page, npages):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    resident = tbl_ref[b, j] >= 0
+
+    @pl.when(resident)
+    def _compute():
+        q = q_ref[0, 0].astype(F32)                   # [G, D]
+        k = k_ref[0, :, 0, :].astype(F32)             # [page, D]
+        v = v_ref[0, :, 0, :].astype(F32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=F32) * scale       # [G, page]
+        pos = j * page + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        mask = pos < len_ref[b]
+        logits = jnp.where(mask, logits, NEG_INF)
+        s_max = jnp.max(logits, axis=1)
+        m_new = jnp.maximum(m_scr[...], s_max)
+        p = jnp.where(mask, jnp.exp(logits - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_scr[...] - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32))
+        m_scr[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pool, v_pool, block_tbl, lengths, *,
+                                  interpret: bool = False):
+    """q: [B, Hkv, G, D]; pools: [N, page, Hkv, D]; block_tbl: [B, P]."""
+    b, hkv, g, d = q.shape
+    n, page, _, _ = k_pool.shape
+    p = block_tbl.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, page=page,
+                               npages=p)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, p),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, tbl, ln: (b_, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h, j, tbl, ln: (
+                             jnp.maximum(tbl[b_, j], 0), 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h, j, tbl, ln: (
+                             jnp.maximum(tbl[b_, j], 0), 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, h, j, tbl, ln: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), F32),
+            pltpu.VMEM((g,), F32),
+            pltpu.VMEM((g, d), F32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tbl, lengths, q, k_pool, v_pool)

@@ -1,0 +1,17 @@
+"""jit'd wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import paged_decode_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tbl, lengths, *,
+                           interpret: bool = False):
+    """q: [B, Hkv, G, D] one-token queries; pools [N, page, Hkv, D];
+    block_tbl [B, P] (entries < 0 = non-resident, masked); lengths [B]."""
+    return paged_decode_attention_kernel(
+        q, k_pool, v_pool, block_tbl, lengths, interpret=interpret)

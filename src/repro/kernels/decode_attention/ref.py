@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for paged decode attention.
+
+One new token per sequence attends over a paged KV pool through a block
+table. Entries < 0 in the block table are holes (not resident); the oracle
+treats them as fully masked (the runtime fetches them through the MeDiC
+host-tier path before calling the kernel).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tbl, lengths):
+    """q: [B, Hkv, G, D]; pools: [N, page, Hkv, D]; block_tbl: [B, P];
+    lengths: [B]. Returns [B, Hkv, G, D]."""
+    b, hkv, g, d = q.shape
+    n, page, _, _ = k_pool.shape
+    p = block_tbl.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    tbl = jnp.maximum(block_tbl, 0)
+    k = k_pool[tbl]                                   # [B, P, page, Hkv, D]
+    v = v_pool[tbl]
+    k = jnp.moveaxis(k, 3, 1).reshape(b, hkv, p * page, d)
+    v = jnp.moveaxis(v, 3, 1).reshape(b, hkv, p * page, d)
+    pos = jnp.arange(p * page)[None]
+    resident = jnp.repeat(block_tbl >= 0, page, axis=1)
+    valid = (pos < lengths[:, None]) & resident       # [B, P*page]
+
+    logits = jnp.einsum("bhgd,bhsd->bhgs", q.astype(F32), k.astype(F32))
+    logits = logits * scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(valid[:, None, None, :], w, 0.0)
+    o = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(F32))
+    return o.astype(q.dtype)

@@ -1,0 +1,126 @@
+"""Pallas TPU flash-attention kernel (causal / sliding-window, GQA).
+
+TPU-codesigned tiling:
+  * grid = (B * Hkv * G, nq, nk) — the kv axis is the minormost grid
+    dimension, which TPU executes sequentially per core, so the online-
+    softmax running statistics live in VMEM scratch across kv steps;
+  * q/o blocks (bq, d) and k/v blocks (bk, d) are VMEM-resident tiles;
+    bq/bk default to 128/256 to keep the (bq x bk) logits tile MXU-aligned
+    (multiples of 128) and the working set
+    (bq*d + 2*bk*d + bq*bk) * 4B well under the ~16 MB VMEM budget;
+  * GQA is expressed through the k/v BlockSpec index maps (q-head
+    bh -> kv-head bh // G) so kv tiles are fetched once per group, not
+    duplicated in HBM;
+  * causal/SWA tiles that cannot intersect the mask are skipped with
+    pl.when (on hardware the fetch is also elided since the block is not
+    written), giving near-triangular work.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window, bq: int, bk: int,
+                  nk: int, seq_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = kj * bk
+
+    live = True
+    if causal:
+        live = k_start <= q_start + bq - 1
+    if window is not None:
+        live = live & (k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(F32)                       # [bq, d]
+        k = k_ref[0].astype(F32)                       # [bk, d]
+        v = v_ref[0].astype(F32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=F32) * scale        # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]                            # [bq]
+        s_max = jnp.max(logits, axis=1)
+        m_new = jnp.maximum(m_prev, s_max)
+        p = jnp.exp(logits - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=F32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window=None,
+                         bq: int = 128, bk: int = 128,
+                         interpret: bool = False):
+    """q: [BHq, S, D]; k/v: [BHkv, Skv, D]. BHq = BHkv * G."""
+    bh, s, d = q.shape
+    bhkv, sk, _ = k.shape
+    g = bh // bhkv
+    bq = min(bq, s)
+    bk = min(bk, sk)
+    assert s % bq == 0 and sk % bk == 0
+    nq, nk = s // bq, sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, seq_kv=sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=g: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            _scratch((bq,), F32),
+            _scratch((bq,), F32),
+            _scratch((bq, d), F32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

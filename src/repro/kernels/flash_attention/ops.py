@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Accepts the model layout q [B, S, H, D], k/v [B, Skv, Hkv, D] and handles
+the [BH, S, D] kernel layout, GQA head folding and the interpret flag
+(interpret=True executes the kernel body in Python on CPU for validation;
+on TPU pass interpret=False).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    bq: int = 128, bk: int = 128, interpret: bool = False):
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    # [B,S,H,D] -> [B*H, S, D] with q heads grouped so q-head index // g
+    # recovers the kv head: order heads as (kv_head, group)
+    qt = jnp.transpose(q.reshape(b, s, hkv, g, d), (0, 2, 3, 1, 4))
+    qt = qt.reshape(b * hkv * g, s, d)
+    kt = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * hkv, k.shape[1], d)
+    vt = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * hkv, v.shape[1], d)
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                             bq=bq, bk=bk, interpret=interpret)
+    o = o.reshape(b, hkv, g, s, d)
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(b, s, h, d)

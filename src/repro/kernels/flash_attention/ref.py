@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Layout convention for the kernel family: q [B, S, H, D], k/v [B, S, Hkv, D]
+with GQA group G = H // Hkv. Computation in f32, output cast to q.dtype.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, s, hkv, g, d).astype(F32)
+    logits = jnp.einsum("bqkgd,bskd->bqkgs", qg, k.astype(F32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", w, v.astype(F32))
+    return o.reshape(b, s, h, d).astype(q.dtype)

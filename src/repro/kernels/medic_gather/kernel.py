@@ -1,0 +1,53 @@
+"""Pallas TPU block-pool gather: pool pages -> contiguous per-sequence KV.
+
+This is the *bypass/stream* path of the MeDiC pool manager: blocks of a
+mostly-miss sequence are streamed through a transient contiguous buffer
+(never pinned in the pool), and re-fetched host blocks are landed the same
+way. The whole kernel is BlockSpec-driven: the index map chases the block
+table from scalar-prefetch SMEM, so each grid step is exactly one
+HBM->HBM(VMEM-staged) page DMA; holes (< 0) write zeros without issuing a
+fetch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(tbl_ref, pool_ref, out_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    resident = tbl_ref[b, j] >= 0
+
+    @pl.when(resident)
+    def _copy():
+        out_ref[0, 0] = pool_ref[0]
+
+    @pl.when(~resident)
+    def _zero():
+        out_ref[0, 0] = jnp.zeros_like(out_ref[0, 0])
+
+
+def medic_gather_kernel(pool, block_tbl, *, interpret: bool = False):
+    """pool: [N, page, H, D]; block_tbl: [B, P] -> [B, P, page, H, D]."""
+    n, page, h, d = pool.shape
+    b, p = block_tbl.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, p),
+        in_specs=[
+            pl.BlockSpec((1, page, h, d),
+                         lambda b_, j, tbl: (jnp.maximum(tbl[b_, j], 0),
+                                             0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, page, h, d),
+                               lambda b_, j, tbl: (b_, j, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, p, page, h, d), pool.dtype),
+        interpret=interpret,
+    )(block_tbl, pool)

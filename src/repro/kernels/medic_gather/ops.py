@@ -1,0 +1,13 @@
+"""jit'd wrapper for the MeDiC block-pool gather."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.medic_gather.kernel import medic_gather_kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def medic_gather(pool, block_tbl, *, interpret: bool = False):
+    return medic_gather_kernel(pool, block_tbl, interpret=interpret)

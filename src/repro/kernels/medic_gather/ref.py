@@ -1,0 +1,13 @@
+"""Oracle for the MeDiC block-pool gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def medic_gather_ref(pool, block_tbl):
+    """pool: [N, page, H, D]; block_tbl: [B, P] (<0 = hole -> zeros).
+    Returns [B, P, page, H, D]."""
+    tbl = jnp.maximum(block_tbl, 0)
+    out = pool[tbl]
+    mask = (block_tbl >= 0)[..., None, None, None]
+    return jnp.where(mask, out, jnp.zeros_like(out))

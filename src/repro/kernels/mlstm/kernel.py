@@ -1,0 +1,108 @@
+"""Pallas TPU chunkwise mLSTM kernel.
+
+TPU codesign: the matrix memory C [Dk, Dv] plus normalizer/stabilizer live
+in VMEM scratch per (batch, head); the grid walks chunks of the sequence as
+the minormost (sequential) dimension. Within a chunk the math is dense
+matmuls on (chunk x Dk)/(chunk x chunk) tiles — MXU-shaped — while the
+cross-chunk recurrence runs in exact stabilized form (identical numerics to
+the chunkwise reference in repro.models.xlstm).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, h_ref,
+                  c_scr, n_scr, m_scr, *, chunk: int, scale: float):
+    jc = pl.program_id(1)
+
+    @pl.when(jc == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+
+    q = q_ref[0].astype(F32)          # [C, Dk]
+    k = k_ref[0].astype(F32)
+    v = v_ref[0].astype(F32)          # [C, Dv]
+    li = li_ref[0, :, 0]              # [C] (padded lane dim)
+    lf = lf_ref[0, :, 0]
+
+    bcum = jnp.cumsum(lf)             # [C]
+    btot = bcum[-1]
+    m_prev = m_scr[0, 0]
+
+    dmat = bcum[:, None] - bcum[None, :] + li[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dmat = jnp.where(tri, dmat, NEG_INF)
+    g = bcum + m_prev
+    m_loc = jnp.maximum(jnp.max(dmat, axis=1), g)
+
+    w = jnp.exp(dmat - m_loc[:, None])
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32) * scale
+    wqk = w * qk
+    inter = jnp.exp(g - m_loc)
+    num = (jax.lax.dot_general(wqk, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=F32)
+           + inter[:, None] * jax.lax.dot_general(
+               q, c_scr[...], (((1,), (0,)), ((), ())),
+               preferred_element_type=F32) * scale)
+    den_dot = (jnp.sum(wqk, axis=1)
+               + inter * (q @ n_scr[:, 0]) * scale)
+    den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_loc))
+    h_ref[0] = (num / den[:, None]).astype(h_ref.dtype)
+
+    # state to chunk end
+    dend = btot - bcum + li
+    m_new = jnp.maximum(btot + m_prev, jnp.max(dend))
+    sc = jnp.exp(dend - m_new)
+    c_scr[...] = (jnp.exp(btot + m_prev - m_new) * c_scr[...]
+                  + jax.lax.dot_general(k * sc[:, None], v,
+                                        (((0,), (0,)), ((), ())),
+                                        preferred_element_type=F32))
+    n_scr[...] = (jnp.exp(btot + m_prev - m_new) * n_scr[...]
+                  + (k * sc[:, None]).sum(axis=0)[:, None])
+    m_scr[...] = jnp.full_like(m_scr, m_new)
+
+
+def mlstm_kernel(q, k, v, li, lf, *, chunk: int = 64,
+                 interpret: bool = False):
+    """q,k: [BH, S, Dk]; v: [BH, S, Dv]; li/lf: [BH, S]. -> h [BH, S, Dv]."""
+    bh, s, dk = q.shape
+    dv = v.shape[2]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    scale = 1.0 / math.sqrt(dk)
+    li2 = li[..., None]  # pad a lane dim for TPU-friendly 2D+ blocks
+    lf2 = lf[..., None]
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), F32),
+            pltpu.VMEM((dk, 1), F32),
+            pltpu.VMEM((1, 1), F32),
+        ],
+        interpret=interpret,
+    )(q, k, v, li2, lf2)

@@ -1,0 +1,25 @@
+"""jit'd wrapper for the chunkwise mLSTM kernel (model layout adapter)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mlstm.kernel import mlstm_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm(q, k, v, li, lf, *, chunk: int = 64, interpret: bool = False):
+    """Model layout: q,k [B,S,H,Dk]; v [B,S,H,Dv]; li/lf [B,S,H]."""
+    b, s, h, dk = q.shape
+    dv = v.shape[3]
+
+    def fold(x):
+        return jnp.moveaxis(x, 2, 1).reshape(b * h, s, *x.shape[3:])
+
+    out = mlstm_kernel(fold(q), fold(k), fold(v),
+                       fold(li[..., None])[..., 0],
+                       fold(lf[..., None])[..., 0],
+                       chunk=chunk, interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, s, dv), 1, 2)

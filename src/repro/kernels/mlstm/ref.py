@@ -1,0 +1,11 @@
+"""Oracle for the chunkwise mLSTM kernel: the exact recurrent form."""
+from __future__ import annotations
+
+from repro.models.xlstm import mlstm_recurrent_ref
+
+
+def mlstm_ref(q, k, v, li, lf):
+    """q,k: [B,S,H,Dk]; v: [B,S,H,Dv]; li/lf: [B,S,H] (i preact, logsig f).
+    Returns h: [B,S,H,Dv]."""
+    h, _ = mlstm_recurrent_ref(q, k, v, li, lf, None)
+    return h

@@ -1,0 +1,14 @@
+"""jit'd wrapper for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rg_lru.kernel import rg_lru_kernel
+
+
+@partial(jax.jit, static_argnames=("bw", "bt", "interpret"))
+def rg_lru(a, b, h0, *, bw: int = 128, bt: int = 16,
+           interpret: bool = False):
+    return rg_lru_kernel(a, b, h0, bw=bw, bt=bt, interpret=interpret)

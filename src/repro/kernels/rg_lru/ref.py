@@ -1,0 +1,19 @@
+"""Oracle for the RG-LRU recurrence kernel: h_t = a_t * h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_ref(a, b, h0):
+    """a, b: [B, S, W] f32; h0: [B, W]. Returns h: [B, S, W]."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a_t = jnp.moveaxis(a, 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1)

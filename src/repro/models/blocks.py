@@ -1,0 +1,406 @@
+"""BlockDefs for every model family.
+
+Block apply signature: (cfg, params, x, aux, cache) -> (x, new_cache, aux_loss)
+
+``aux`` carries scan-invariant context:
+  static:  "mode" in {"train","prefill","decode"}
+  arrays:  "q_pos" [B,S]   positions of current tokens
+           "kv_pos" [B,W]  positions held in the self-attn cache (-1 invalid)
+           "write_slot" [B] decode write index into the cache ring
+           "enc_out" [B,Se,D], "enc_pos" [Se]      (whisper)
+           "img" [B,Ti,D], "img_pos" [Ti]          (vlm)
+
+Caches are per-layer slices handed in by the stack scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import recurrent as REC
+from repro.models import xlstm as XL
+from repro.models.stack import BlockDef
+from repro.sharding import Logical, shard_act
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# shared attention plumbing
+# ---------------------------------------------------------------------------
+
+def _self_attention(cfg, p, x, aux, cache, *, window=None, use_rope=True,
+                    causal=True):
+    """Returns (attn_out, new_cache). Handles train/prefill/decode."""
+    mode = aux["mode"]
+    q, k, v = L.attn_project_qkv(cfg, p, x, aux["q_pos"], use_rope=use_rope)
+    softcap = None  # per-layer attn softcap unused; final-logit cap in model
+
+    if mode == "train" or cache is None:
+        o = L.attention_train(q, k, v, aux["q_pos"], aux["q_pos"],
+                              window=window, causal=causal, softcap=softcap)
+        return L.attn_out(p, o), None
+
+    if mode == "prefill":
+        o = L.attention_prefill(q, k, v, aux["q_pos"], aux["q_pos"],
+                                window=window, causal=causal, softcap=softcap)
+        w = cache["k"].shape[1]
+        s = k.shape[1]
+        if w >= s:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        else:
+            # ring buffer: keep the last w tokens at slot = pos % w
+            slots = aux["q_pos"][:, s - w:] % w                  # [B,w]
+            ck = _scatter_ring(cache["k"], k[:, s - w:], slots)
+            cv = _scatter_ring(cache["v"], v[:, s - w:], slots)
+        return L.attn_out(p, o), {"k": ck, "v": cv}
+
+    # decode: write new kv at write_slot, attend over cache
+    slot = aux["write_slot"]                                     # [B]
+    ck = _scatter_ring(cache["k"], k, slot[:, None])
+    cv = _scatter_ring(cache["v"], v, slot[:, None])
+    o = L.attention_decode(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                           aux["q_pos"], aux["kv_pos"],
+                           window=window, softcap=softcap)
+    return L.attn_out(p, o), {"k": ck, "v": cv}
+
+
+def _scatter_ring(cache, kv_new, slots):
+    """cache [B,W,kv,hd]; kv_new [B,S,kv,hd]; slots [B,S] -> updated cache."""
+
+    def upd(c_b, kv_b, s_b):
+        return c_b.at[s_b].set(kv_b.astype(c_b.dtype))
+
+    return jax.vmap(upd)(cache, kv_new, slots)
+
+
+def _cross_attention(cfg, p, x, mem, mem_pos, cache, *, fresh: bool):
+    """Cross attention; KV from `mem` when fresh (train/prefill) else cached."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if not fresh and cache is not None:
+        k, v = cache["xk"].astype(q.dtype), cache["xv"].astype(q.dtype)
+        new_cache = cache
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", mem, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", mem, p["wv"])
+        new_cache = None
+        if cache is not None:
+            new_cache = {"xk": k.astype(cache["xk"].dtype),
+                         "xv": v.astype(cache["xv"].dtype)}
+    qpos = jnp.zeros((x.shape[0], x.shape[1]), jnp.int32)
+    kpos = jnp.zeros((x.shape[0], k.shape[1]), jnp.int32)
+    o = L.attention_full(q, k, v, qpos, kpos, causal=False)
+    return L.attn_out(p, o), new_cache
+
+
+def _kv_cache_init(cfg, batch, w, dtype):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    c = {"k": jnp.zeros((batch, w, kv, hd), dtype),
+         "v": jnp.zeros((batch, w, kv, hd), dtype)}
+    lg = {"k": Logical("batch", "kv_seq", "kv_heads", None),
+          "v": Logical("batch", "kv_seq", "kv_heads", None)}
+    return c, lg
+
+
+# ---------------------------------------------------------------------------
+# dense / moe transformer layer
+# ---------------------------------------------------------------------------
+
+def _norm_params(key, cfg):
+    return jnp.zeros((cfg.d_model,), F32), Logical("embed")
+
+
+def dense_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    ap, alg = L.attn_params(k1, cfg)
+    mp, mlg = L.mlp_params(k2, cfg, gated=True)
+    n1, n1lg = _norm_params(key, cfg)
+    n2, n2lg = _norm_params(key, cfg)
+    return ({"norm1": n1, "attn": ap, "norm2": n2, "mlp": mp},
+            {"norm1": n1lg, "attn": alg, "norm2": n2lg, "mlp": mlg})
+
+
+def dense_layer_apply(cfg, p, x, aux, cache):
+    # TP-boundary outputs are tagged so the remat policy can SAVE them
+    # (sequence-sharded, so cheap) instead of re-running the fwd TP
+    # all-reduce/all-gather pair during backward recompute (§Perf q1).
+    x = shard_act(x, "batch", "seq_sp", None)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    a, new_cache = _self_attention(cfg, p["attn"], h, aux, cache,
+                                   window=cfg.sliding_window)
+    a = checkpoint_name(shard_act(a, "batch", "seq_sp", None), "tp_out")
+    x = x + a
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    y = checkpoint_name(
+        shard_act(L.mlp_apply(cfg, p["mlp"], h), "batch", "seq_sp", None),
+        "tp_out")
+    x = x + y
+    return x, new_cache, jnp.zeros((), F32)
+
+
+def dense_layer_cache(cfg, batch, shape_cfg):
+    w = shape_cfg.seq_len
+    if cfg.sliding_window is not None:
+        w = min(w, cfg.sliding_window)
+    return _kv_cache_init(cfg, batch, w, jnp.dtype(cfg.dtype))
+
+
+def moe_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    ap, alg = L.attn_params(k1, cfg)
+    mp, mlg = MOE.moe_params(k2, cfg)
+    n1, n1lg = _norm_params(key, cfg)
+    n2, n2lg = _norm_params(key, cfg)
+    return ({"norm1": n1, "attn": ap, "norm2": n2, "moe": mp},
+            {"norm1": n1lg, "attn": alg, "norm2": n2lg, "moe": mlg})
+
+
+def moe_layer_apply(cfg, p, x, aux, cache):
+    x = shard_act(x, "batch", "seq_sp", None)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    a, new_cache = _self_attention(cfg, p["attn"], h, aux, cache,
+                                   window=cfg.sliding_window)
+    x = x + a
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    y, aux_loss = MOE.moe_apply(cfg, p["moe"], h)
+    x = x + y
+    x = shard_act(x, "batch", "seq_sp", None)
+    return x, new_cache, aux_loss
+
+
+# ---------------------------------------------------------------------------
+# RecurrentGemma blocks
+# ---------------------------------------------------------------------------
+
+def rec_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    rp, rlg = REC.rglru_params(k1, cfg)
+    mp, mlg = L.mlp_params(k2, cfg)
+    n1, _ = _norm_params(key, cfg)
+    n2, _ = _norm_params(key, cfg)
+    return ({"norm1": n1, "rec": rp, "norm2": n2, "mlp": mp},
+            {"norm1": Logical("embed"), "rec": rlg,
+             "norm2": Logical("embed"), "mlp": mlg})
+
+
+def rec_block_apply(cfg, p, x, aux, cache):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    y, new_cache = REC.rglru_apply(cfg, p["rec"], h, cache)
+    x = x + y
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + L.mlp_apply(cfg, p["mlp"], h)
+    return x, new_cache, jnp.zeros((), F32)
+
+
+def rec_block_cache(cfg, batch, shape_cfg):
+    return REC.rglru_cache(cfg, batch)
+
+
+def local_attn_init(key, cfg):
+    return dense_layer_init(key, cfg)
+
+
+def local_attn_apply(cfg, p, x, aux, cache):
+    x = shard_act(x, "batch", "seq_sp", None)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    a, new_cache = _self_attention(cfg, p["attn"], h, aux, cache,
+                                   window=cfg.local_window)
+    x = x + a
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + L.mlp_apply(cfg, p["mlp"], h)
+    return x, new_cache, jnp.zeros((), F32)
+
+
+def local_attn_cache(cfg, batch, shape_cfg):
+    w = min(shape_cfg.seq_len, cfg.local_window)
+    return _kv_cache_init(cfg, batch, w, jnp.dtype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key, cfg):
+    p, lg = XL.mlstm_params(key, cfg)
+    n, nlg = _norm_params(key, cfg)
+    return {"norm": n, "mlstm": p}, {"norm": nlg, "mlstm": lg}
+
+
+def mlstm_block_apply(cfg, p, x, aux, cache):
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    y, new_cache = XL.mlstm_apply(cfg, p["mlstm"], h, cache)
+    return x + y, new_cache, jnp.zeros((), F32)
+
+
+def mlstm_block_cache(cfg, batch, shape_cfg):
+    return XL.mlstm_cache(cfg, batch)
+
+
+def slstm_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p, lg = XL.slstm_params(k1, cfg)
+    mp, mlg = L.mlp_params(k2, cfg, d_ff=max(cfg.d_ff, 4 * cfg.d_model // 3))
+    n1, _ = _norm_params(key, cfg)
+    n2, _ = _norm_params(key, cfg)
+    return ({"norm1": n1, "slstm": p, "norm2": n2, "mlp": mp},
+            {"norm1": Logical("embed"), "slstm": lg,
+             "norm2": Logical("embed"), "mlp": mlg})
+
+
+def slstm_block_apply(cfg, p, x, aux, cache):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    y, new_cache = XL.slstm_apply(cfg, p["slstm"], h, cache)
+    x = x + y
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + L.mlp_apply(cfg, p["mlp"], h)
+    return x, new_cache, jnp.zeros((), F32)
+
+
+def slstm_block_cache(cfg, batch, shape_cfg):
+    return XL.slstm_cache(cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# Whisper blocks (encoder bidirectional; decoder self + cross)
+# ---------------------------------------------------------------------------
+
+def enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    ap, alg = L.attn_params(k1, cfg)
+    mp, mlg = L.mlp_params(k2, cfg, gated=False)
+    n1, _ = _norm_params(key, cfg)
+    n2, _ = _norm_params(key, cfg)
+    return ({"norm1": n1, "attn": ap, "norm2": n2, "mlp": mp},
+            {"norm1": Logical("embed"), "attn": alg,
+             "norm2": Logical("embed"), "mlp": mlg})
+
+
+def enc_layer_apply(cfg, p, x, aux, cache):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    q, k, v = L.attn_project_qkv(cfg, p["attn"], h, aux["q_pos"], use_rope=False)
+    o = L.attention_full(q, k, v, aux["q_pos"], aux["q_pos"], causal=False)
+    x = x + L.attn_out(p["attn"], o)
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + L.mlp_apply(cfg, p["mlp"], h)
+    return x, None, jnp.zeros((), F32)
+
+
+def dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    ap, alg = L.attn_params(k1, cfg)
+    xp, xlg = L.attn_params(k2, cfg, cross=True)
+    mp, mlg = L.mlp_params(k3, cfg, gated=False)
+    n1, _ = _norm_params(key, cfg)
+    n2, _ = _norm_params(key, cfg)
+    n3, _ = _norm_params(key, cfg)
+    return ({"norm1": n1, "attn": ap, "norm2": n2, "xattn": xp,
+             "norm3": n3, "mlp": mp},
+            {"norm1": Logical("embed"), "attn": alg,
+             "norm2": Logical("embed"), "xattn": xlg,
+             "norm3": Logical("embed"), "mlp": mlg})
+
+
+def dec_layer_apply(cfg, p, x, aux, cache):
+    self_cache = None
+    cross_cache = None
+    if cache is not None:
+        self_cache = {"k": cache["k"], "v": cache["v"]}
+        cross_cache = {"xk": cache["xk"], "xv": cache["xv"]}
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    a, new_self = _self_attention(cfg, p["attn"], h, aux, self_cache,
+                                  use_rope=True)
+    x = x + a
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    a, new_cross = _cross_attention(cfg, p["xattn"], h, aux["enc_out"],
+                                    aux["enc_pos"], cross_cache,
+                                    fresh=aux["mode"] != "decode")
+    x = x + a
+    h = L.rms_norm(x, p["norm3"], cfg.norm_eps)
+    x = x + L.mlp_apply(cfg, p["mlp"], h)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(new_self)
+        new_cache.update(new_cross)
+    return x, new_cache, jnp.zeros((), F32)
+
+
+def dec_layer_cache(cfg, batch, shape_cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    c, lg = _kv_cache_init(cfg, batch, shape_cfg.seq_len, dtype)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    c["xk"] = jnp.zeros((batch, cfg.encoder_seq_len, kv, hd), dtype)
+    c["xv"] = jnp.zeros((batch, cfg.encoder_seq_len, kv, hd), dtype)
+    lg["xk"] = Logical("batch", "enc_seq", "kv_heads", None)
+    lg["xv"] = Logical("batch", "enc_seq", "kv_heads", None)
+    return c, lg
+
+
+# ---------------------------------------------------------------------------
+# VLM cross block (Llama-3.2-Vision style gated cross-attention layer)
+# ---------------------------------------------------------------------------
+
+def vlm_cross_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    xp, xlg = L.attn_params(k1, cfg, cross=True)
+    mp, mlg = L.mlp_params(k2, cfg)
+    n1, _ = _norm_params(key, cfg)
+    n2, _ = _norm_params(key, cfg)
+    return ({"norm1": n1, "xattn": xp, "gate_attn": jnp.zeros((), F32),
+             "norm2": n2, "mlp": mp, "gate_mlp": jnp.zeros((), F32)},
+            {"norm1": Logical("embed"), "xattn": xlg, "gate_attn": Logical(),
+             "norm2": Logical("embed"), "mlp": mlg, "gate_mlp": Logical()})
+
+
+def vlm_cross_apply(cfg, p, x, aux, cache):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    a, new_cache = _cross_attention(cfg, p["xattn"], h, aux["img"],
+                                    aux["img_pos"], cache,
+                                    fresh=aux["mode"] != "decode")
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * L.mlp_apply(cfg, p["mlp"], h)
+    return x, new_cache, jnp.zeros((), F32)
+
+
+def vlm_cross_cache(cfg, batch, shape_cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    c = {"xk": jnp.zeros((batch, cfg.num_image_tokens, kv, hd), dtype),
+         "xv": jnp.zeros((batch, cfg.num_image_tokens, kv, hd), dtype)}
+    lg = {"xk": Logical("batch", "kv_seq", "kv_heads", None),
+          "xv": Logical("batch", "kv_seq", "kv_heads", None)}
+    return c, lg
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+BLOCKS = {
+    "layer": BlockDef("layer", dense_layer_init, dense_layer_apply,
+                      dense_layer_cache),
+    "moe_layer": BlockDef("moe_layer", moe_layer_init, moe_layer_apply,
+                          dense_layer_cache),
+    "rec": BlockDef("rec", rec_block_init, rec_block_apply, rec_block_cache),
+    "attn": BlockDef("attn", local_attn_init, local_attn_apply,
+                     local_attn_cache),
+    "mlstm": BlockDef("mlstm", mlstm_block_init, mlstm_block_apply,
+                      mlstm_block_cache),
+    "slstm": BlockDef("slstm", slstm_block_init, slstm_block_apply,
+                      slstm_block_cache),
+    "enc": BlockDef("enc", enc_layer_init, enc_layer_apply, None),
+    "dec": BlockDef("dec", dec_layer_init, dec_layer_apply, dec_layer_cache),
+    "self": BlockDef("self", dense_layer_init, dense_layer_apply,
+                     dense_layer_cache),
+    "cross": BlockDef("cross", vlm_cross_init, vlm_cross_apply,
+                      vlm_cross_cache),
+}

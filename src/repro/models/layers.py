@@ -1,0 +1,407 @@
+"""Shared neural-net layers for the model zoo.
+
+All layers are pure functions over (params, inputs). Parameters are nested
+dicts of jnp arrays; each builder also exposes a parallel tree of
+``sharding.Logical`` leaves naming the logical axes of every parameter.
+
+Attention comes in three memory-bounded flavours (pure jnp/lax — the Pallas
+kernels in ``repro.kernels`` are drop-in replacements for the same math and
+are validated against these in interpret mode):
+
+* ``attention_train``   -- AD-friendly flash attention: outer ``lax.scan``
+  over q blocks (emitting output blocks as ys), inner scan over kv blocks
+  with online softmax. Causal masking is applied inside the block; for
+  sliding-window attention the inner scan statically visits only the
+  ``window/chunk + 1`` kv blocks that can intersect the window, so SWA
+  training does no wasted block work.
+* ``attention_prefill`` -- no-AD flash attention with *exact triangular*
+  work: a single scan enumerates only the (q-block, kv-block) pairs that are
+  live under the causal/SWA mask and scatters finished q blocks into an
+  output buffer carried through the scan.
+* ``attention_decode``  -- one-token attention against a (possibly ring-
+  buffered) KV cache, unchunked; positions are explicit so ring buffers and
+  partially-filled caches mask correctly.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import Logical, shard_act
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# initializers / basics
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, F32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(F32) + bias.astype(F32)).astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, half-split convention.
+
+    x: [..., S, H, D]; positions: broadcastable to [..., S] (int32).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, kv_pos, window: Optional[int], causal: bool):
+    """q_pos: [..., Sq], kv_pos: [..., Sk] -> bool [..., Sq, Sk].
+
+    kv_pos < 0 marks invalid (unfilled ring-buffer) slots.
+    """
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    m = k >= 0
+    if causal:
+        m &= q >= k
+    if window is not None:
+        m &= (q - k) < window
+    return m
+
+
+def _softcap(logits, cap: Optional[float]):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def _block_attn(q, k, v, qpos, kpos, *, window, causal, softcap, scale):
+    """One flash block. q:[B,Q,Kv,G,D] k,v:[B,C,Kv,D] -> (s_max, p_sum, pv).
+
+    Returns block statistics in f32 for the online-softmax combine.
+    """
+    logits = jnp.einsum("bqkgd,bckd->bqkgc", q.astype(F32), k.astype(F32)) * scale
+    logits = _softcap(logits, softcap)
+    msk = _mask(qpos, kpos, window, causal)[:, :, None, None, :]  # [B,Q,1,1,C]
+    logits = jnp.where(msk, logits, NEG_INF)
+    s_max = jnp.max(logits, axis=-1)                      # [B,Q,Kv,G]
+    p = jnp.exp(logits - s_max[..., None])
+    p = jnp.where(msk, p, 0.0)
+    p_sum = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(F32))
+    return s_max, p_sum, pv
+
+
+def _combine(m, l, acc, s_max, p_sum, pv):
+    m_new = jnp.maximum(m, s_max)
+    alpha = jnp.exp(m - m_new)
+    beta = jnp.exp(s_max - m_new)
+    l_new = l * alpha + p_sum * beta
+    acc_new = acc * alpha[..., None] + pv * beta[..., None]
+    return m_new, l_new, acc_new
+
+
+def _group(q, num_kv):
+    """[B,S,H,D] -> [B,S,Kv,G,D]"""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def _ungroup(o):
+    b, s, kv, g, d = o.shape
+    return o.reshape(b, s, kv * g, d)
+
+
+def attention_full(q, k, v, q_pos, kv_pos, *, window=None, causal=True,
+                   softcap=None) -> jax.Array:
+    """Unblocked reference attention (small S / decode / oracle)."""
+    num_kv = k.shape[2]
+    qg = _group(q, num_kv)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(F32), k.astype(F32)) * scale
+    logits = _softcap(logits, softcap)
+    msk = _mask(q_pos, kv_pos, window, causal)[:, :, None, None, :]
+    logits = jnp.where(msk, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(msk, w, 0.0)  # rows with no valid kv -> 0
+    o = jnp.einsum("bqkgs,bskd->bqkgd", w, v.astype(F32))
+    return _ungroup(o).astype(q.dtype)
+
+
+def attention_train(q, k, v, q_pos, kv_pos, *, window=None, causal=True,
+                    softcap=None, q_chunk=512, kv_chunk=512) -> jax.Array:
+    """AD-friendly flash attention (see module docstring)."""
+    b, s, h, d = q.shape
+    num_kv = k.shape[2]
+    if s <= max(q_chunk, 1024) or s % q_chunk or k.shape[1] % kv_chunk:
+        return attention_full(q, k, v, q_pos, kv_pos, window=window,
+                              causal=causal, softcap=softcap)
+    sk = k.shape[1]
+    nq, nk = s // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+    qg = _group(q, num_kv).reshape(b, nq, q_chunk, num_kv, h // num_kv, d)
+    qg = jnp.moveaxis(qg, 1, 0)                       # [nq,B,Q,Kv,G,D]
+    kb = k.reshape(b, nk, kv_chunk, num_kv, d)
+    vb = v.reshape(b, nk, kv_chunk, num_kv, d)
+    qp = jnp.broadcast_to(q_pos, (b, s)).reshape(b, nq, q_chunk)
+    qp = jnp.moveaxis(qp, 1, 0)
+    kp = jnp.broadcast_to(kv_pos, (b, sk)).reshape(b, nk, kv_chunk)
+
+    # For SWA, only kv blocks within [i - window_blocks, i] can intersect.
+    if window is not None and causal:
+        wblocks = min(nk, window // kv_chunk + 2)
+    else:
+        wblocks = nk
+
+    def q_step(_, qi):
+        qblk, qpblk, i = qi
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            jj = jnp.clip(j, 0, nk - 1)
+            kblk = jax.lax.dynamic_index_in_dim(kb, jj, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, jj, 1, keepdims=False)
+            kpb = jax.lax.dynamic_index_in_dim(kp, jj, 1, keepdims=False)
+            kpb = jnp.where(j < 0, -1, kpb)  # out-of-range SWA block -> invalid
+            s_max, p_sum, pv = _block_attn(qblk, kblk, vblk, qpblk, kpb,
+                                           window=window, causal=causal,
+                                           softcap=softcap, scale=scale)
+            return _combine(m, l, acc, s_max, p_sum, pv), None
+
+        m0 = jnp.full((b, q_chunk, num_kv, h // num_kv), NEG_INF, F32)
+        l0 = jnp.zeros_like(m0)
+        a0 = jnp.zeros((b, q_chunk, num_kv, h // num_kv, d), F32)
+        if window is not None and causal:
+            js = i - wblocks + 1 + jnp.arange(wblocks)
+        else:
+            js = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), js)
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, o.astype(q.dtype)
+
+    idx = jnp.arange(nq)
+    _, ob = jax.lax.scan(q_step, None, (qg, qp, idx))
+    o = jnp.moveaxis(ob, 0, 1).reshape(b, s, num_kv, h // num_kv, d)
+    return _ungroup(o)
+
+
+def attention_prefill(q, k, v, q_pos, kv_pos, *, window=None, causal=True,
+                      softcap=None, q_chunk=512, kv_chunk=512) -> jax.Array:
+    """Exact-work flash attention for (no-grad) prefill.
+
+    Enumerates only live (q-block, kv-block) pairs; finished q blocks are
+    scattered into the carried output buffer. For causal full attention the
+    live set is the lower triangle (exact triangular FLOPs); for SWA it is a
+    band of width window/kv_chunk + 2.
+    """
+    b, s, h, d = q.shape
+    num_kv = k.shape[2]
+    if s <= max(q_chunk, 1024) or s % q_chunk or k.shape[1] % kv_chunk:
+        return attention_full(q, k, v, q_pos, kv_pos, window=window,
+                              causal=causal, softcap=softcap)
+    sk = k.shape[1]
+    nq, nk = s // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+    qg = _group(q, num_kv).reshape(b, nq, q_chunk, num_kv, h // num_kv, d)
+    kb = k.reshape(b, nk, kv_chunk, num_kv, d)
+    vb = v.reshape(b, nk, kv_chunk, num_kv, d)
+    qp = jnp.broadcast_to(q_pos, (b, s)).reshape(b, nq, q_chunk)
+    kp = jnp.broadcast_to(kv_pos, (b, sk)).reshape(b, nk, kv_chunk)
+
+    # static enumeration of live (i, j) pairs, row-major so each q block's
+    # pairs are contiguous and the row ends at its diagonal block
+    pairs = []
+    if causal and window is not None:
+        wblocks = min(nk, window // kv_chunk + 2)
+        for i in range(nq):
+            for j in range(max(0, i - wblocks + 1), i + 1):
+                pairs.append((i, j))
+    elif causal:
+        for i in range(nq):
+            for j in range(i + 1):
+                pairs.append((i, j))
+    else:
+        for i in range(nq):
+            for j in range(nk):
+                pairs.append((i, j))
+    ii = jnp.array([p[0] for p in pairs], jnp.int32)
+    jj = jnp.array([p[1] for p in pairs], jnp.int32)
+    flush = jnp.array([p1 == pairs[t + 1][0] if t + 1 < len(pairs) else True
+                       for t, p1 in enumerate(p[0] for p in pairs)]) == False  # noqa: E712
+    flush = jnp.array([(t + 1 == len(pairs)) or (pairs[t + 1][0] != p[0])
+                       for t, p in enumerate(pairs)])
+
+    g = h // num_kv
+    m0 = jnp.full((b, q_chunk, num_kv, g), NEG_INF, F32)
+    l0 = jnp.zeros_like(m0)
+    a0 = jnp.zeros((b, q_chunk, num_kv, g, d), F32)
+    o0 = jnp.zeros((nq, b, q_chunk, num_kv, g, d), q.dtype)
+
+    def step(carry, t):
+        o_buf, m, l, acc = carry
+        i, j, fl = t
+        qblk = jax.lax.dynamic_index_in_dim(qg, i, 1, keepdims=False)
+        qpblk = jax.lax.dynamic_index_in_dim(qp, i, 1, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        kpb = jax.lax.dynamic_index_in_dim(kp, j, 1, keepdims=False)
+        s_max, p_sum, pv = _block_attn(qblk, kblk, vblk, qpblk, kpb,
+                                       window=window, causal=causal,
+                                       softcap=softcap, scale=scale)
+        m, l, acc = _combine(m, l, acc, s_max, p_sum, pv)
+        oblk = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        o_buf = jax.lax.cond(
+            fl, lambda ob: jax.lax.dynamic_update_index_in_dim(ob, oblk, i, 0),
+            lambda ob: ob, o_buf)
+        # reset stats after a flush
+        m = jnp.where(fl, m0, m)
+        l = jnp.where(fl, l0, l)
+        acc = jnp.where(fl, a0, acc)
+        return (o_buf, m, l, acc), None
+
+    (o_buf, _, _, _), _ = jax.lax.scan(step, (o0, m0, l0, a0), (ii, jj, flush))
+    o = jnp.moveaxis(o_buf, 0, 1).reshape(b, s, num_kv, g, d)
+    return _ungroup(o)
+
+
+def attention_decode(q, k, v, q_pos, kv_pos, *, window=None, softcap=None):
+    """Single-step decode attention. q: [B,1,H,D]; cache k/v: [B,S,Kv,D]."""
+    return attention_full(q, k, v, q_pos, kv_pos, window=window, causal=True,
+                          softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def attn_params(key, cfg, *, cross=False, dtype=None):
+    """Parameters + logical specs for one attention block."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, h, hd), d, dtype),
+        "wk": dense_init(k2, (d, kv, hd), d, dtype),
+        "wv": dense_init(k3, (d, kv, hd), d, dtype),
+        "wo": dense_init(k4, (h, hd, d), h * hd, dtype),
+    }
+    lg = {
+        "wq": Logical("embed", "heads", "head_dim"),
+        "wk": Logical("embed", "kv_heads", "head_dim"),
+        "wv": Logical("embed", "kv_heads", "head_dim"),
+        "wo": Logical("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+        lg["bq"] = Logical("heads", "head_dim")
+        lg["bk"] = Logical("kv_heads", "head_dim")
+        lg["bv"] = Logical("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), F32)
+        p["k_norm"] = jnp.zeros((hd,), F32)
+        lg["q_norm"] = Logical("head_dim")
+        lg["k_norm"] = Logical("head_dim")
+    return p, lg
+
+
+def attn_project_qkv(cfg, p, x, positions, *, use_rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard_act(q, "batch", None, "heads", None)
+    k = shard_act(k, "batch", None, "kv_heads", None)
+    v = shard_act(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attn_out(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, cfg, d_ff=None, *, gated=True, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if gated:
+        p = {"w_gate": dense_init(k1, (d, f), d, dtype),
+             "w_up": dense_init(k2, (d, f), d, dtype),
+             "w_down": dense_init(k3, (f, d), f, dtype)}
+        lg = {"w_gate": Logical("embed", "mlp"),
+              "w_up": Logical("embed", "mlp"),
+              "w_down": Logical("mlp", "embed")}
+    else:
+        p = {"w_up": dense_init(k1, (d, f), d, dtype),
+             "w_down": dense_init(k2, (f, d), f, dtype),
+             "b_up": jnp.zeros((f,), dtype), "b_down": jnp.zeros((d,), dtype)}
+        lg = {"w_up": Logical("embed", "mlp"), "w_down": Logical("mlp", "embed"),
+              "b_up": Logical("mlp"), "b_down": Logical("embed")}
+    return p, lg
+
+
+def mlp_apply(cfg, p, x):
+    act = activation(cfg.act)
+    if "w_gate" in p:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    else:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p["b_up"])
+    h = shard_act(h, "batch", None, "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y

@@ -1,0 +1,362 @@
+"""Unified Model API for all 10 assigned architectures.
+
+``build_model(cfg)`` returns a ``Model`` with:
+  init_params(rng)             -> params pytree (bf16 weights)
+  logical_params()             -> parallel tree of sharding.Logical leaves
+  loss(params, batch)          -> (scalar loss, metrics)          [train]
+  prefill(params, batch, cache)-> (last-pos logits, cache)        [serve]
+  decode(params, tokens, cache)-> (logits, cache)                 [serve]
+  init_cache(batch, shape_cfg) -> cache pytree (+ logical tree)
+  input_specs(shape_cfg)       -> dict of ShapeDtypeStruct stand-ins
+  cache_specs(shape_cfg)       -> cache as ShapeDtypeStruct tree
+
+The cache pytree always contains:
+  "stack":  per-block-kind stacked caches (KV rings / recurrent states)
+  "len":    [B] int32 tokens generated so far
+  "kv_pos": [B, W] int32 positions held in self-attn cache slots (-1 empty)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.stack import StackDef, apply_stack, init_stack, init_stack_cache
+from repro.sharding import Logical, shard_act
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# stack construction per family
+# ---------------------------------------------------------------------------
+
+def _stackdef(cfg: ModelConfig) -> StackDef:
+    fam = cfg.family
+    if fam == "dense":
+        return StackDef(("layer",), cfg.num_layers, B.BLOCKS)
+    if fam == "moe":
+        return StackDef(("moe_layer",), cfg.num_layers, B.BLOCKS)
+    if fam == "hybrid":
+        pattern = cfg.block_pattern or ("rec", "rec", "attn")
+        n = cfg.num_layers // len(pattern)
+        tail = tuple(pattern[: cfg.num_layers - n * len(pattern)])
+        return StackDef(pattern, n, B.BLOCKS, tail=tail)
+    if fam == "ssm":
+        pattern = cfg.block_pattern or ("mlstm", "slstm")
+        n = cfg.num_layers // len(pattern)
+        tail = tuple(pattern[: cfg.num_layers - n * len(pattern)])
+        return StackDef(pattern, n, B.BLOCKS, tail=tail)
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        pattern = ("self",) * (k - 1) + ("cross",)
+        assert cfg.num_layers % k == 0
+        return StackDef(pattern, cfg.num_layers // k, B.BLOCKS)
+    if fam == "encdec":
+        return StackDef(("dec",), cfg.num_layers, B.BLOCKS)
+    raise ValueError(fam)
+
+
+def _enc_stackdef(cfg: ModelConfig) -> StackDef:
+    return StackDef(("enc",), cfg.num_encoder_layers, B.BLOCKS)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stack = _stackdef(cfg)
+        self.enc_stack = _enc_stackdef(cfg) if cfg.family == "encdec" else None
+
+    # -- params ------------------------------------------------------------
+
+    def init_params(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        k_emb, k_stack, k_enc, k_head = jax.random.split(rng, 4)
+        params: Dict[str, Any] = {
+            "embed": L.embed_init(k_emb, (cfg.padded_vocab, cfg.d_model), dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), F32),
+        }
+        params["stack"], self._stack_lg = init_stack(k_stack, cfg, self.stack)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(
+                k_head, (cfg.d_model, cfg.padded_vocab), cfg.d_model, dtype)
+        if self.enc_stack is not None:
+            params["enc_stack"], self._enc_lg = init_stack(k_enc, cfg,
+                                                           self.enc_stack)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), F32)
+        return params
+
+    def logical_params(self):
+        cfg = self.cfg
+        # make sure the cached stack logical trees exist
+        if not hasattr(self, "_stack_lg"):
+            jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
+        lg: Dict[str, Any] = {
+            "embed": Logical("vocab", "embed"),
+            "final_norm": Logical("embed"),
+            "stack": self._stack_lg,
+        }
+        if not cfg.tie_embeddings:
+            lg["lm_head"] = Logical("embed", "vocab")
+        if self.enc_stack is not None:
+            lg["enc_stack"] = self._enc_lg
+            lg["enc_norm"] = Logical("embed")
+        return lg
+
+    # -- shared forward ----------------------------------------------------
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return shard_act(x, "batch", None, None)
+
+    def _head(self, params, x):
+        x = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, w).astype(F32)
+        if self.cfg.logit_softcap:
+            c = self.cfg.logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        return shard_act(logits, "batch", None, "vocab")
+
+    def _encode(self, params, frames):
+        """Whisper encoder over precomputed (stubbed) frame embeddings."""
+        cfg = self.cfg
+        se = frames.shape[1]
+        pos = jnp.arange(se, dtype=jnp.int32)[None, :]
+        x = frames + _sinusoidal(se, cfg.d_model, frames.dtype)
+        aux = {"mode": "train", "q_pos": jnp.broadcast_to(pos, frames.shape[:2])}
+        x, _, _ = apply_stack(cfg, self.enc_stack, params["enc_stack"], x, aux)
+        return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _aux_for(self, params, batch, mode, cache=None, tokens=None):
+        cfg = self.cfg
+        aux: Dict[str, Any] = {"mode": mode}
+        if mode in ("train", "prefill"):
+            t = tokens if tokens is not None else batch["tokens"]
+            bsz, s = t.shape
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+            aux["q_pos"] = pos
+        else:
+            bsz = tokens.shape[0]
+            aux["q_pos"] = cache["len"][:, None]
+            aux["kv_pos"] = cache["kv_pos"]
+            w = cache["kv_pos"].shape[1]
+            aux["write_slot"] = cache["len"] % w
+        if cfg.family == "encdec":
+            enc_out = (self._encode(params, batch["frames"])
+                       if mode != "decode" else cache["enc_out"])
+            aux["enc_out"] = enc_out
+            aux["enc_pos"] = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        if cfg.family == "vlm":
+            img = batch["image_embeds"] if mode != "decode" else None
+            if img is None:
+                img = jnp.zeros((bsz, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+            aux["img"] = img
+            aux["img_pos"] = jnp.arange(img.shape[1], dtype=jnp.int32)
+        return aux
+
+    # -- train -------------------------------------------------------------
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        aux = self._aux_for(params, batch, "train")
+        x = self._embed(params, tokens)
+        x, _, aux_loss = apply_stack(cfg, self.stack, params["stack"], x, aux)
+        logits = self._head(params, x)
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], F32), jnp.zeros_like(tokens[:, :1], F32)],
+            axis=1)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt_logit = jnp.take_along_axis(logits, targets[..., None],
+                                        axis=-1)[..., 0]
+        nll = (lse - tgt_logit) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll) / denom
+        zloss = 1e-4 * jnp.sum((lse * mask) ** 2) / denom
+        total = ce + zloss + cfg.router_aux_coef * aux_loss
+        return total, {"loss": total, "ce": ce, "aux_loss": aux_loss,
+                       "zloss": zloss}
+
+    # -- serve -------------------------------------------------------------
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        aux = self._aux_for(params, batch, "prefill")
+        x = self._embed(params, tokens)
+        x, new_stack, _ = apply_stack(cfg, self.stack, params["stack"], x, aux,
+                                      cache=cache["stack"], remat=False)
+        logits = self._head(params, x[:, -1:])
+        s = tokens.shape[1]
+        w = cache["kv_pos"].shape[1]
+        kv_pos = _ring_positions(s, w)[None]
+        new_cache = {
+            "stack": new_stack,
+            "len": jnp.full_like(cache["len"], s),
+            "kv_pos": jnp.broadcast_to(kv_pos, cache["kv_pos"].shape),
+        }
+        if cfg.family == "encdec":
+            new_cache["enc_out"] = aux["enc_out"]
+        return logits[:, 0], new_cache
+
+    def decode(self, params, tokens, cache):
+        """tokens: [B,1]. Returns (logits [B,V], new cache)."""
+        cfg = self.cfg
+        aux = self._aux_for(params, None, "decode", cache=cache, tokens=tokens)
+        # the new token's kv_pos lands at write_slot
+        w = cache["kv_pos"].shape[1]
+        slot = aux["write_slot"]
+        kv_pos = jax.vmap(lambda kp, s, l: kp.at[s].set(l))(
+            cache["kv_pos"], slot, cache["len"])
+        aux["kv_pos"] = kv_pos
+        x = self._embed(params, tokens)
+        x, new_stack, _ = apply_stack(cfg, self.stack, params["stack"], x, aux,
+                                      cache=cache["stack"], remat=False)
+        logits = self._head(params, x)
+        new_cache = dict(cache)
+        new_cache.update({
+            "stack": new_stack,
+            "len": cache["len"] + 1,
+            "kv_pos": kv_pos,
+        })
+        return logits[:, 0], new_cache
+
+    # -- caches / specs ------------------------------------------------------
+
+    def _window(self, shape_cfg: ShapeConfig) -> int:
+        cfg = self.cfg
+        w = shape_cfg.seq_len
+        if cfg.family == "hybrid":
+            w = min(w, cfg.local_window)
+        elif cfg.sliding_window is not None:
+            w = min(w, cfg.sliding_window)
+        elif cfg.family == "ssm":
+            w = 1  # no attention cache; keep a stub ring of 1
+        return w
+
+    def init_cache(self, batch: int, shape_cfg: ShapeConfig,
+                   filled: bool = False):
+        cfg = self.cfg
+        stack_cache, _ = init_stack_cache(cfg, self.stack, batch, shape_cfg)
+        w = self._window(shape_cfg)
+        if filled:
+            # decode dry-run: cache holds seq_len-1 tokens already
+            ln = jnp.full((batch,), shape_cfg.seq_len - 1, jnp.int32)
+            kvp = _ring_positions(shape_cfg.seq_len - 1, w)[None]
+        else:
+            ln = jnp.zeros((batch,), jnp.int32)
+            kvp = jnp.full((1, w), -1, jnp.int32)
+        cache = {"stack": stack_cache, "len": ln,
+                 "kv_pos": jnp.broadcast_to(kvp, (batch, w))}
+        if cfg.family == "encdec":
+            cache["enc_out"] = jnp.zeros(
+                (batch, cfg.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return cache
+
+    def cache_logical(self, batch: int, shape_cfg: ShapeConfig):
+        cfg = self.cfg
+        # build the logical tree WITHOUT allocating the (potentially
+        # hundreds-of-GB) cache arrays: trace abstractly, capture the
+        # logical side-channel
+        holder = {}
+
+        def build():
+            c, lg = init_stack_cache(cfg, self.stack, batch, shape_cfg)
+            holder["lg"] = lg
+            return c
+
+        jax.eval_shape(build)
+        out = {"stack": holder["lg"], "len": Logical("batch"),
+               "kv_pos": Logical("batch", "kv_seq")}
+        if cfg.family == "encdec":
+            out["enc_out"] = Logical("batch", "enc_seq", None)
+        return out
+
+    def input_specs(self, shape_cfg: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        bsz = shape_cfg.global_batch
+        dtype = jnp.dtype(cfg.dtype)
+        if shape_cfg.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((bsz, shape_cfg.seq_len),
+                                                    jnp.int32)}
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((bsz, 1), jnp.int32)}
+        if cfg.family == "encdec" and shape_cfg.kind != "decode":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (bsz, cfg.encoder_seq_len, cfg.d_model), dtype)
+        if cfg.family == "vlm" and shape_cfg.kind != "decode":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (bsz, cfg.num_image_tokens, cfg.d_model), dtype)
+        return specs
+
+    def cache_specs(self, shape_cfg: ShapeConfig):
+        return jax.eval_shape(
+            lambda: self.init_cache(shape_cfg.global_batch, shape_cfg,
+                                    filled=True))
+
+    def batch_logical(self, shape_cfg: ShapeConfig):
+        lg = {"tokens": Logical("batch", None)}
+        if self.cfg.family == "encdec" and shape_cfg.kind != "decode":
+            lg["frames"] = Logical("batch", "enc_seq", None)
+        if self.cfg.family == "vlm" and shape_cfg.kind != "decode":
+            lg["image_embeds"] = Logical("batch", None, None)
+        return lg
+
+
+def _ring_positions(filled_len: int, w: int) -> jnp.ndarray:
+    """Positions stored in each ring slot after `filled_len` writes."""
+    slots = np.full((w,), -1, np.int32)
+    for p in range(max(0, filled_len - w), filled_len):
+        slots[p % w] = p
+    return jnp.asarray(slots)
+
+
+def _sinusoidal(s: int, d: int, dtype):
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype)[None]
+
+
+# ---------------------------------------------------------------------------
+# factory + analytics
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    total = 0
+    moe_frac = (cfg.num_experts_per_tok / cfg.num_experts
+                if cfg.num_experts else 1.0)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        keys = "/".join(str(k) for k in path)
+        if active_only and cfg.num_experts and (
+                "w_gate" in keys or "w_up" in keys or "w_down" in keys) and \
+                "moe" in keys:
+            n = int(n * moe_frac)
+        total += n
+    return total

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+Dispatch is sort-free: positions-within-expert come from an exclusive cumsum
+over the one-hot assignment matrix, then tokens are scattered into a
+``[E, C, D]`` expert buffer (overflow beyond capacity C is dropped, standard
+dropless-approximation) and gathered back with router weights.
+
+Sharding regimes (resolved automatically by ``sharding.spec_for``):
+  * E % model == 0 (OLMoE: 64 experts on 16-way model axis) -> expert
+    parallelism: buffer and weights sharded over ``expert``; XLA inserts
+    all-to-all-style collectives for the scatter/gather.
+  * E % model != 0 (Grok-1: 8 experts) -> tensor parallelism *within* each
+    expert: weight ``mlp`` axis sharded over ``model``; the expert buffer
+    stays token-sharded.
+
+FLOPs scale with E*C = tokens * top_k * capacity_factor, i.e. proportional
+to *active* parameters (matters for the MODEL_FLOPS/HLO_FLOPs roofline
+ratio).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, dense_init
+from repro.sharding import Logical, shard_act
+
+F32 = jnp.float32
+
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def moe_params(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(k1, (d, e), d, F32),
+        "w_gate": dense_init(k2, (e, d, f), d, dtype),
+        "w_up": dense_init(k3, (e, d, f), d, dtype),
+        "w_down": dense_init(k4, (e, f, d), f, dtype),
+    }
+    lg = {
+        "router": Logical("embed", None),
+        "w_gate": Logical("expert", "embed", "mlp"),
+        "w_up": Logical("expert", "embed", "mlp"),
+        "w_down": Logical("expert", "mlp", "embed"),
+    }
+    return p, lg
+
+
+def capacity(cfg, num_tokens: int) -> int:
+    tk = num_tokens * cfg.num_experts_per_tok
+    c = int(tk * cfg.capacity_factor / cfg.num_experts)
+    if c >= 128:
+        return _round_up(c, 128)     # MXU-aligned for training shapes
+    # decode / tiny groups: capacity can never exceed all assignments, and
+    # a 128 floor would pad the expert buffer ~16x (§Perf iteration g2)
+    return max(8, _round_up(min(max(c, 8), tk), 8))
+
+
+def moe_apply(cfg, p, x):
+    """x: [B, S, D] -> (y, aux_loss). Dispatch strategy per config:
+
+    * ``dispatch="local"`` (default, the §Perf-optimized path): token
+      routing/dispatch runs inside a ``jax.shard_map`` that is *manual*
+      over the batch axes (pod, data) and *auto* over ``model`` — each
+      data shard scatters only its own tokens into its own expert-capacity
+      buffer, so no cross-shard gather/scatter exists for XLA to
+      "involuntarily rematerialize". Expert weights stay auto-sharded
+      (EP over `model` when E divides it, TP-within-expert otherwise).
+    * ``dispatch="global"`` (paper-faithful baseline we measured first):
+      plain-pjit global-capacity dispatch; SPMD partitioning falls back to
+      replicating the expert buffer (see EXPERIMENTS.md §Perf iteration 1).
+    """
+    from repro.sharding import current_mesh
+    mesh = current_mesh()
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if mesh is not None and a in mesh.axis_names
+                       and mesh.shape[a] > 1)
+    g = _mesh_size(mesh, batch_axes) if batch_axes else 1
+    b = x.shape[0]
+    if g > 1 and b % g == 0:
+        # §Perf iteration 1: grouped dispatch — split tokens into g groups
+        # aligned with the batch sharding so every dispatch gather/scatter
+        # is group-local; SPMD partitions the batched gather along the
+        # sharded group dim instead of replicating the expert buffer.
+        # (§Perf iteration 2 — pre-gathering the FSDP shard of the expert
+        # weights here — was REFUTED: it made SPMD replicate the grouped
+        # computation across the data axis, 10x compute. See EXPERIMENTS.)
+        xg = x.reshape(g, b // g, *x.shape[1:])
+        yg, aux = jax.vmap(
+            lambda xb: _moe_apply_dense(cfg, p, xb, in_manual=True))(xg)
+        return yg.reshape(x.shape), jnp.mean(aux)
+    return _moe_apply_dense(cfg, p, x)
+
+
+def _mesh_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _moe_apply_dense(cfg, p, x, in_manual: bool = False):
+    """Capacity dispatch over whatever token set it is handed (global under
+    plain pjit, per-shard under the shard_map wrapper). ``in_manual`` skips
+    sharding constraints that reference manual (batch) mesh axes."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.num_experts_per_tok
+    e = cfg.num_experts
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(F32), p["router"])   # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, eidx = jax.lax.top_k(probs, k)                          # [T,k]
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(eidx[:, 0], e, dtype=F32), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux_loss = e * jnp.sum(density * density_prob)
+
+    # position-within-expert via exclusive cumsum over one-hot assignments
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)                # [T,k,E]
+    assign = jnp.sum(onehot, axis=1)                                 # [T,E]
+    pos_base = jnp.cumsum(assign, axis=0) - assign                   # excl. over T
+    # within a token, later of the k choices for the same expert offset by
+    # the intra-token exclusive cumsum
+    intra = jnp.cumsum(onehot, axis=1) - onehot                      # [T,k,E]
+    pos = (pos_base[:, None, :] + intra)                             # [T,k,E]
+    pos_tk = jnp.sum(pos * onehot, axis=-1)                          # [T,k]
+
+    cap = capacity(cfg, t)
+    keep = pos_tk < cap
+    dest = eidx * cap + pos_tk                                       # [T,k]
+    dest = jnp.where(keep, dest, e * cap)                            # drop row
+
+    # Dispatch = tiny int32 slot->token scatter + row GATHER. Scattering
+    # full rows makes XLA SPMD fall back to replicate-the-buffer (TBs of
+    # model-axis all-gather at grok scale); scattering 4-byte indices and
+    # gathering rows partitions cleanly.
+    t_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)           # [T*k]
+    slot_token = jnp.zeros((e * cap + 1,), jnp.int32).at[
+        dest.reshape(-1)].set(t_flat + 1, mode="drop")[: e * cap]
+    filled = slot_token > 0
+    buf = xf[jnp.maximum(slot_token - 1, 0)]                         # [E*C, D]
+    buf = jnp.where(filled[:, None], buf, 0).reshape(e, cap, d)
+    if not in_manual:
+        buf = shard_act(buf, "expert", "capacity", None)
+
+    act = activation(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if not in_manual:
+        h = shard_act(h, "expert", "capacity", "mlp")
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if not in_manual:
+        y = shard_act(y, "expert", "capacity", None)
+
+    # gather back and combine with router weights (a bf16-combine variant
+    # was tried and REFUTED — it repartitioned worse; see EXPERIMENTS §Perf)
+    y_flat = jnp.concatenate([y.reshape(e * cap, d),
+                              jnp.zeros((1, d), y.dtype)], axis=0)
+    gathered = y_flat[dest.reshape(-1)].reshape(t, k, d)
+    out = jnp.sum(gathered.astype(F32) * weights[..., None], axis=1)
+    return out.reshape(b, s, d).astype(x.dtype), aux_loss

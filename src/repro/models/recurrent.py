@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence h_t = a_t * h_{t-1} + b_t (log-depth, TPU-friendly); decode
+carries (h, conv-tap) state. All recurrence math in f32.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding import Logical, shard_act
+
+F32 = jnp.float32
+_C = 8.0  # RG-LRU decay sharpness constant
+
+
+def rglru_params(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d, w, cw = cfg.d_model, cfg.lru_width, cfg.conv1d_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so the decay a = exp(-c*softplus(L)*r) lands in [0.9, 0.999]
+    a0 = jnp.linspace(0.9, 0.999, w, dtype=F32)
+    sp = -jnp.log(a0) / _C                      # softplus(L) target
+    lam = jnp.log(jnp.expm1(sp))                # inverse softplus
+    p = {
+        "w_x": dense_init(ks[0], (d, w), d, dtype),
+        "w_gate": dense_init(ks[1], (d, w), d, dtype),
+        "conv_k": dense_init(ks[2], (cw, w), cw, F32),
+        "conv_b": jnp.zeros((w,), F32),
+        "w_r": dense_init(ks[3], (w, w), w, dtype),
+        "b_r": jnp.zeros((w,), F32),
+        "w_i": dense_init(ks[4], (w, w), w, dtype),
+        "b_i": jnp.zeros((w,), F32),
+        "lam": lam,
+        "w_out": dense_init(ks[5], (w, d), w, dtype),
+    }
+    lg = {
+        "w_x": Logical("embed", "lru"),
+        "w_gate": Logical("embed", "lru"),
+        "conv_k": Logical(None, "lru"),
+        "conv_b": Logical("lru"),
+        "w_r": Logical(None, "lru"),
+        "b_r": Logical("lru"),
+        "w_i": Logical(None, "lru"),
+        "b_i": Logical("lru"),
+        "lam": Logical("lru"),
+        "w_out": Logical("lru", "embed"),
+    }
+    return p, lg
+
+
+def _conv1d_causal(x, kernel, bias, state=None):
+    """Depthwise causal conv. x: [B,S,W]; kernel: [CW,W].
+
+    state: [B, CW-1, W] previous taps (decode) or None (train: zero pad).
+    Returns (y, new_state).
+    """
+    cw = kernel.shape[0]
+    xf = x.astype(F32)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), F32)
+    else:
+        pad = state.astype(F32)
+    full = jnp.concatenate([pad, xf], axis=1)          # [B, S+CW-1, W]
+    y = jnp.zeros_like(xf)
+    for j in range(cw):
+        y = y + full[:, j:j + x.shape[1]] * kernel[cw - 1 - j]
+    new_state = full[:, -(cw - 1):] if cw > 1 else pad
+    return (y + bias).astype(x.dtype), new_state
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["w_r"]).astype(F32) + p["b_r"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["w_i"]).astype(F32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r        # [B,S,W], <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc.astype(F32))
+    return a, gated_x
+
+
+def rglru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t via associative scan. a,b: [B,S,W] f32."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(F32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(cfg, p, x, cache=None):
+    """x: [B,S,D]. cache: {"h": [B,W], "conv": [B,CW-1,W]} or None.
+
+    Returns (y, new_cache).
+    """
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    gate = jnp.einsum("bsd,dw->bsw", x, p["w_gate"])
+    xb = shard_act(xb, "batch", None, "lru")
+    gate = shard_act(gate, "batch", None, "lru")
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _conv1d_causal(xb, p["conv_k"], p["conv_b"], conv_state)
+    a, b = _gates(p, xc)
+    h0 = cache["h"] if cache is not None else None
+    if x.shape[1] == 1 and cache is not None:  # decode fast path
+        h = (a[:, 0] * h0.astype(F32) + b[:, 0])[:, None]
+    else:
+        h = rglru_scan(a, b, h0)
+    y = jax.nn.gelu(gate.astype(F32)) * h
+    out = jnp.einsum("bsw,wd->bsd", y.astype(x.dtype), p["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h[:, -1].astype(cache["h"].dtype), "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def rglru_cache(cfg, batch: int):
+    w, cw = cfg.lru_width, cfg.conv1d_width
+    c = {"h": jnp.zeros((batch, w), F32),
+         "conv": jnp.zeros((batch, cw - 1, w), F32)}
+    lg = {"h": Logical("batch", "lru"), "conv": Logical("batch", None, "lru")}
+    return c, lg

@@ -1,0 +1,295 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix-memory LSTM): training/prefill uses the stabilized *chunkwise*
+form — quadratic within a small chunk, recurrent (S_state, n, m) across
+chunks — so the scan length is S/chunk and AD-saved carries stay small.
+Decode uses the exact recurrent form. Both are validated against each other
+in tests (and serve as the oracle for the Pallas kernel).
+
+sLSTM has hidden-to-gate recurrence, so it is inherently sequential: a
+``lax.scan`` over time with exponential-gating stabilizer state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding import Logical, shard_act
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_params(key, cfg, dtype=None):
+    """mLSTM block: up-proj x2, conv-less simplified variant, qkv heads,
+    per-head scalar i/f gates, learnable skip gate, down-proj."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    h = cfg.num_heads
+    dqk = cfg.head_dim            # 192 for xlstm-125m
+    dv = 2 * d // h               # value head dim (up-projection factor 2)
+    inner = 2 * d
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_up": dense_init(ks[0], (d, inner), d, dtype),
+        "w_gate": dense_init(ks[1], (d, inner), d, dtype),
+        "w_q": dense_init(ks[2], (inner, h, dqk), inner, dtype),
+        "w_k": dense_init(ks[3], (inner, h, dqk), inner, dtype),
+        "w_v": dense_init(ks[4], (inner, h, dv), inner, dtype),
+        "w_if": dense_init(ks[5], (inner, h, 2), inner, F32),
+        "b_if": jnp.concatenate([jnp.zeros((h, 1), F32),
+                                 jnp.ones((h, 1), F32) * 3.0], axis=1),
+        "w_o": dense_init(ks[6], (h, dv, d), h * dv, dtype),
+        "skip": jnp.zeros((inner,), F32),
+    }
+    lg = {
+        "w_up": Logical("embed", "mlp"),
+        "w_gate": Logical("embed", "mlp"),
+        "w_q": Logical("mlp", "heads", None),
+        "w_k": Logical("mlp", "heads", None),
+        "w_v": Logical("mlp", "heads", None),
+        "w_if": Logical("mlp", "heads", None),
+        "b_if": Logical("heads", None),
+        "w_o": Logical("heads", None, "embed"),
+        "skip": Logical("mlp"),
+    }
+    return p, lg
+
+
+def mlstm_recurrent_ref(q, k, v, li, lf, state=None):
+    """Exact recurrent mLSTM. q,k: [B,S,H,Dk]; v: [B,S,H,Dv];
+    li/lf: [B,S,H] (raw input-gate preact / log-sigmoid forget preact).
+    state: (C [B,H,Dk,Dv], n [B,H,Dk], m [B,H]) or None.
+    Returns (h [B,S,H,Dv], state)."""
+    b, s, hh, dk = q.shape
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dk)
+    if state is None:
+        c0 = jnp.zeros((b, hh, dk, dv), F32)
+        n0 = jnp.zeros((b, hh, dk), F32)
+        m0 = jnp.full((b, hh), NEG_INF, F32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, xs):
+        c, n, m = carry
+        qt, kt, vt, it, ft = xs  # [B,H,*]
+        m_new = jnp.maximum(ft + m, it)
+        alpha = jnp.exp(ft + m - m_new)
+        beta = jnp.exp(it - m_new)
+        c = alpha[..., None, None] * c + beta[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = alpha[..., None] * n + beta[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, c) * scale
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)) * scale,
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (c, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(a.astype(F32), 1, 0) for a in (q, k, v, li, lf))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), (c, n, m)
+
+
+def mlstm_chunkwise(q, k, v, li, lf, state=None, chunk: int = 256):
+    """Stabilized chunkwise-parallel mLSTM (see module docstring)."""
+    b, s, hh, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk or s <= chunk:
+        return mlstm_recurrent_ref(q, k, v, li, lf, state)
+    nc = s // chunk
+    scale = 1.0 / math.sqrt(dk)
+
+    def resh(a):
+        return jnp.moveaxis(
+            a.astype(F32).reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc, lic, lfc = map(resh, (q, k, v, li, lf))  # [nc,B,C,H,*]
+    if state is None:
+        c0 = jnp.zeros((b, hh, dk, dv), F32)
+        n0 = jnp.zeros((b, hh, dk), F32)
+        m0 = jnp.full((b, hh), NEG_INF, F32)
+    else:
+        c0, n0, m0 = (x.astype(F32) for x in state)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, xs):
+        c, n, m = carry
+        qt, kt, vt, it, ft = xs                   # [B,C,H,*]
+        bcum = jnp.cumsum(ft, axis=1)             # [B,C,H] inclusive logsig-f cumsum
+        btot = bcum[:, -1]                        # [B,H]
+        # intra-chunk decay D[t,s] = bcum[t] - bcum[s] + i[s], s<=t
+        dmat = (bcum[:, :, None] - bcum[:, None, :] +
+                it[:, None, :, :])                # [B,C(t),C(s),H]
+        dmat = jnp.where(tri[None, :, :, None], dmat, NEG_INF)
+        g = bcum + m[:, None, :]                  # inter log-scale [B,C,H]
+        m_loc = jnp.maximum(jnp.max(dmat, axis=2), g)   # [B,C,H]
+        w = jnp.exp(dmat - m_loc[:, :, None, :])        # [B,C,C,H]
+        qk = jnp.einsum("bthk,bshk->btsh", qt, kt) * scale
+        wqk = w * qk                                    # [B,C,C,H]
+        inter_scale = jnp.exp(g - m_loc)                # [B,C,H]
+        num = (jnp.einsum("btsh,bshv->bthv", wqk, vt)
+               + inter_scale[..., None]
+               * jnp.einsum("bthk,bhkv->bthv", qt, c) * scale)
+        den_dot = (jnp.sum(wqk, axis=2)
+                   + inter_scale * jnp.einsum("bthk,bhk->bth", qt, n) * scale)
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_loc))
+        h = num / den[..., None]
+        # state update to chunk end
+        dend = btot[:, None, :] - bcum + it             # [B,C,H]
+        m_new = jnp.maximum(btot + m, jnp.max(dend, axis=1))
+        sc = jnp.exp(dend - m_new[:, None, :])          # [B,C,H]
+        c = (jnp.exp(btot + m - m_new)[..., None, None] * c
+             + jnp.einsum("bsh,bshk,bshv->bhkv", sc, kt, vt))
+        n = (jnp.exp(btot + m - m_new)[..., None] * n
+             + jnp.einsum("bsh,bshk->bhk", sc, kt))
+        return (c, n, m_new), h
+
+    (c, n, m), hs = jax.lax.scan(chunk_step, (c0, n0, m0),
+                                 (qc, kc, vc, lic, lfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, hh, dv)
+    return h, (c, n, m)
+
+
+def mlstm_apply(cfg, p, x, cache=None):
+    """x: [B,S,D]; cache {"c","n","m"} or None. Returns (y, new_cache)."""
+    b, s, d = x.shape
+    up = jnp.einsum("bsd,di->bsi", x, p["w_up"])
+    gate = jnp.einsum("bsd,di->bsi", x, p["w_gate"])
+    up = shard_act(up, "batch", None, "mlp")
+    q = jnp.einsum("bsi,ihk->bshk", up, p["w_q"])
+    k = jnp.einsum("bsi,ihk->bshk", up, p["w_k"])
+    v = jnp.einsum("bsi,ihv->bshv", up, p["w_v"])
+    gif = jnp.einsum("bsi,ihg->bshg", up.astype(F32), p["w_if"]) + p["b_if"]
+    li, lf = gif[..., 0], _logsig(gif[..., 1])
+    state = None
+    if cache is not None:
+        state = (cache["c"], cache["n"], cache["m"])
+    if s == 1 and cache is not None:
+        h, state = mlstm_recurrent_ref(q, k, v, li, lf, state)
+    else:
+        h, state = mlstm_chunkwise(q, k, v, li, lf, state)
+    # gated inner stream (h lives in the 2D "inner" width: H * Dv == 2*D),
+    # plus a learnable per-channel skip of the up-projected stream
+    inner = h.reshape(b, s, -1).astype(F32)
+    inner = inner * jax.nn.silu(gate.astype(F32)) + p["skip"] * up.astype(F32)
+    inner = inner.astype(x.dtype).reshape(b, s, cfg.num_heads, -1)
+    out = jnp.einsum("bshv,hvd->bsd", inner, p["w_o"])
+    new_cache = None
+    if cache is not None:
+        c, n, m = state
+        new_cache = {"c": c.astype(cache["c"].dtype),
+                     "n": n.astype(cache["n"].dtype),
+                     "m": m.astype(cache["m"].dtype)}
+    return out, new_cache
+
+
+def mlstm_cache(cfg, batch: int):
+    h = cfg.num_heads
+    dk = cfg.head_dim
+    dv = 2 * cfg.d_model // h
+    c = {"c": jnp.zeros((batch, h, dk, dv), F32),
+         "n": jnp.zeros((batch, h, dk), F32),
+         "m": jnp.full((batch, h), NEG_INF, F32)}
+    lg = {"c": Logical("batch", "heads", None, None),
+          "n": Logical("batch", "heads", None),
+          "m": Logical("batch", "heads")}
+    return c, lg
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_params(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    p = {
+        # input gates: 4 gates (i,f,z,o) from x
+        "w_gates": dense_init(ks[0], (d, 4, d), d, dtype),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((1, d)), jnp.ones((1, d)) * 3.0,
+             jnp.zeros((2, d))], axis=0).astype(F32),
+        # block-diagonal recurrent weights per head: [H,4,hd,hd]
+        "r_gates": dense_init(ks[1], (h, 4, hd, hd), hd, dtype),
+        "w_out": dense_init(ks[2], (d, d), d, dtype),
+    }
+    lg = {
+        "w_gates": Logical("embed", None, "mlp"),
+        "b_gates": Logical(None, "mlp"),
+        "r_gates": Logical("heads", None, None, None),
+        "w_out": Logical("mlp", "embed"),
+    }
+    return p, lg
+
+
+def slstm_apply(cfg, p, x, cache=None):
+    """Sequential sLSTM. x: [B,S,D]; cache {"c","n","h","m"}."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    wx = jnp.einsum("bsd,dgk->bsgk", x, p["w_gates"]).astype(F32) + p["b_gates"]
+
+    if cache is not None:
+        c0 = cache["c"].astype(F32)
+        n0 = cache["n"].astype(F32)
+        h0 = cache["h"].astype(F32)
+        m0 = cache["m"].astype(F32)
+    else:
+        c0 = jnp.zeros((b, d), F32)
+        n0 = jnp.ones((b, d), F32)
+        h0 = jnp.zeros((b, d), F32)
+        m0 = jnp.zeros((b, d), F32)
+
+    r = p["r_gates"].astype(F32)
+
+    def step(carry, wxt):
+        c, n, hprev, m = carry
+        hh = hprev.reshape(b, h, hd)
+        rec = jnp.einsum("bhk,hgkj->bghj", hh, r).reshape(b, 4, d)
+        g = wxt + rec
+        li = g[:, 0]
+        lf = _logsig(g[:, 1])
+        z = jnp.tanh(g[:, 2])
+        o = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(lf + m, li)
+        ci = jnp.exp(lf + m - m_new)
+        zi = jnp.exp(li - m_new)
+        c_new = ci * c + zi * z
+        n_new = ci * n + zi
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    wxs = jnp.moveaxis(wx, 1, 0)  # [S,B,4,D]
+    (c, n, hl, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), wxs)
+    y = jnp.moveaxis(hs, 0, 1)  # [B,S,D]
+    out = jnp.einsum("bsd,dk->bsk", y.astype(x.dtype), p["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c.astype(cache["c"].dtype), "n": n.astype(cache["n"].dtype),
+                     "h": hl.astype(cache["h"].dtype), "m": m.astype(cache["m"].dtype)}
+    return out, new_cache
+
+
+def slstm_cache(cfg, batch: int):
+    d = cfg.d_model
+    c = {"c": jnp.zeros((batch, d), F32), "n": jnp.ones((batch, d), F32),
+         "h": jnp.zeros((batch, d), F32), "m": jnp.zeros((batch, d), F32)}
+    lg = {k: Logical("batch", "mlp") for k in c}
+    return c, lg

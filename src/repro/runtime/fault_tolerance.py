@@ -1,0 +1,141 @@
+"""Fault-tolerant training driver: checkpoint/restart, failure injection,
+straggler detection, elastic re-mesh.
+
+The driver is the piece a 1000-node deployment keeps identical: only the
+failure *source* changes (injected exceptions here; preemptions / ICI
+errors / host loss in production).
+
+  * restart: any exception inside the step loop triggers restore from the
+    latest checkpoint (params, optimizer state, data-iterator state) and a
+    bounded number of resumes;
+  * straggler detection: an EMA/deviation filter over per-step wall times;
+    sustained outliers fire the mitigation hook (production: hot-spare
+    swap / re-shard; here: recorded + pluggable);
+  * elastic re-mesh: checkpoints are mesh-agnostic (see checkpointing),
+    ``reshard_tree`` republishes a tree onto a new mesh's shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointing import CheckpointManager
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises at the configured global steps (once each)."""
+    fail_at: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+class StragglerDetector:
+    def __init__(self, window: int = 20, threshold: float = 3.0):
+        self.window = window
+        self.threshold = threshold
+        self.times: List[float] = []
+        self.events: List[Dict] = []
+
+    def observe(self, step: int, dt: float,
+                mitigate: Optional[Callable[[int], None]] = None):
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        if len(hist) >= self.window // 2 + 1:
+            med = float(np.median(hist[:-1]))
+            mad = float(np.median(np.abs(np.asarray(hist[:-1]) - med))) + 1e-9
+            if dt > med + self.threshold * 6.0 * mad and dt > 1.5 * med:
+                self.events.append({"step": step, "dt": dt, "median": med})
+                if mitigate is not None:
+                    mitigate(step)
+
+
+def reshard_tree(tree, shardings):
+    """Republish a pytree onto new shardings (elastic re-mesh)."""
+    return jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(a), s), tree, shardings)
+
+
+@dataclasses.dataclass
+class LoopResult:
+    steps_run: int
+    restarts: int
+    final_step: int
+    metrics_history: List[Dict]
+    straggler_events: List[Dict]
+
+
+def run_fault_tolerant(step_fn, params, opt_state, data_iter, *,
+                       ckpt: CheckpointManager, total_steps: int,
+                       checkpoint_every: int = 10,
+                       injector: Optional[FailureInjector] = None,
+                       max_restarts: int = 8,
+                       on_metrics: Optional[Callable] = None) -> LoopResult:
+    """Run `total_steps` of step_fn with checkpoint/restart semantics.
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    template = {"params": params, "opt": opt_state}
+    restarts = 0
+    history: List[Dict] = []
+    straggler = StragglerDetector()
+
+    restored = ckpt.restore_latest(template)
+    if restored is not None:
+        start, tree, extra = restored
+        params, opt_state = tree["params"], tree["opt"]
+        data_iter.load_state_dict(extra["data"])
+        step = start
+    else:
+        step = 0
+        ckpt.save(0, template, {"data": data_iter.state_dict()}, block=True)
+
+    while step < total_steps:
+        try:
+            batch = next(data_iter)
+            if injector is not None:
+                injector.check(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            straggler.observe(step, dt)
+            metrics = {k: float(v) for k, v in metrics.items()
+                       if np.ndim(v) == 0}
+            metrics["step"] = step
+            history.append(metrics)
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            step += 1
+            if step % checkpoint_every == 0 or step == total_steps:
+                ckpt.save(step, {"params": params, "opt": opt_state},
+                          {"data": data_iter.state_dict()})
+        except Exception as e:  # noqa: BLE001 — restart on any step failure
+            if isinstance(e, KeyboardInterrupt):
+                raise
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            ckpt.wait()
+            restored = ckpt.restore_latest(template)
+            assert restored is not None, "no checkpoint to restart from"
+            step, tree, extra = restored
+            params, opt_state = tree["params"], tree["opt"]
+            data_iter.load_state_dict(extra["data"])
+
+    ckpt.wait()
+    return LoopResult(steps_run=len(history), restarts=restarts,
+                      final_step=step, metrics_history=history,
+                      straggler_events=straggler.events)

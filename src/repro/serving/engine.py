@@ -1,0 +1,273 @@
+"""Continuous-batching serving engine with MeDiC-managed KV residency.
+
+The engine runs a *real* (reduced-config) decoder LM: admission -> prefill
+-> batched decode steps, with the KV cache of every slot physically managed
+at block granularity by ``MedicPoolManager``:
+
+  * on eviction a block's K/V payload is copied to a host-side store and
+    ZEROED in the device cache;
+  * on fetch it is restored before the decode step runs;
+  * sequences whose fetches have not completed (two-queue transfer model)
+    skip decode steps (the warp-stall analogue).
+
+Because the data path is real, a residency-accounting bug corrupts logits —
+tests exploit this by comparing a tight-budget run's outputs against an
+unconstrained run (they must be bit-identical).
+
+Shared-prefix blocks are accounting-shared across sequences (pseudo-slots);
+their payloads are duplicated per-slot and not offloaded (timing realism,
+data-path simplification — see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import build_model
+from repro.serving.pool import MedicPoolManager, PoolConfig
+from repro.serving.request import Request, ServeWorkload, generate_requests
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8
+    max_len: int = 512
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig,
+                 pool_cfg: PoolConfig):
+        assert cfg.family in ("dense",), "engine demo targets dense LMs"
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.model = build_model(cfg)
+        self.params = self.model.init_params(jax.random.PRNGKey(ecfg.seed))
+        self.shape = ShapeConfig("serve", ecfg.max_len, ecfg.max_slots,
+                                 "decode")
+        self.cache = self.model.init_cache(ecfg.max_slots, self.shape)
+        self.bs = pool_cfg.block_tokens
+        # pseudo-slots for shared prefixes sit after the real slots
+        self.pool = MedicPoolManager(pool_cfg, ecfg.max_slots + 8,
+                                     on_evict=self._offload)
+        self.host_store: Dict[tuple, np.ndarray] = {}
+        self.slots: List[Optional[Request]] = [None] * ecfg.max_slots
+        self._decode = jax.jit(self.model.decode)
+        self._prefill = jax.jit(self.model.prefill)
+        self.rng = np.random.default_rng(ecfg.seed)
+
+    # -- block data path ------------------------------------------------------
+
+    def _kv_leaves(self):
+        sc = self.cache["stack"]["scan"]
+        key = next(iter(sc))
+        return sc[key]
+
+    def _offload(self, key):
+        slot, idx = key
+        if slot >= self.ecfg.max_slots:
+            return  # shared pseudo-slot: accounting only
+        kv = self._kv_leaves()
+        lo = idx * self.bs
+        k = np.asarray(kv["k"][:, slot, lo:lo + self.bs])
+        v = np.asarray(kv["v"][:, slot, lo:lo + self.bs])
+        self.host_store[key] = np.stack([k, v])
+        zer = jnp.zeros_like(kv["k"][:, slot, lo:lo + self.bs])
+        kv["k"] = kv["k"].at[:, slot, lo:lo + self.bs].set(zer)
+        kv["v"] = kv["v"].at[:, slot, lo:lo + self.bs].set(zer)
+
+    def _restore(self, key):
+        slot, idx = key
+        if slot >= self.ecfg.max_slots:
+            return
+        data = self.host_store.get(key)
+        if data is None:
+            return  # never offloaded (still physically present)
+        kv = self._kv_leaves()
+        lo = idx * self.bs
+        kv["k"] = kv["k"].at[:, slot, lo:lo + self.bs].set(
+            jnp.asarray(data[0]))
+        kv["v"] = kv["v"].at[:, slot, lo:lo + self.bs].set(
+            jnp.asarray(data[1]))
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def _prompt_tokens(self, req: Request) -> np.ndarray:
+        toks = []
+        if req.shared_prefix_id is not None:
+            prng = np.random.default_rng(1000 + req.shared_prefix_id)
+            toks.append(prng.integers(1, self.cfg.vocab_size,
+                                      req.shared_prefix_len))
+        prng = np.random.default_rng(2000 + req.rid)
+        toks.append(prng.integers(1, self.cfg.vocab_size, req.prompt_len))
+        return np.concatenate(toks).astype(np.int32)
+
+    def _block_keys(self, req: Request, length: int) -> List[tuple]:
+        """Residency keys for the first `length` tokens of the sequence.
+        Shared-prefix blocks map to the prefix's pseudo-slot."""
+        keys = []
+        nshared = req.shared_prefix_len // self.bs if req.shared_prefix_id is not None else 0
+        nblocks = -(-length // self.bs)
+        for i in range(nblocks):
+            if i < nshared:
+                keys.append((self.ecfg.max_slots + req.shared_prefix_id, i))
+            else:
+                keys.append((req.slot, i))
+        return keys
+
+    def _admit(self, req: Request, slot: int, step: int):
+        req.slot = slot
+        req.enqueue_step = step
+        self.slots[slot] = req
+        self.pool.reset_slot(slot)
+        for key in list(self.host_store):
+            if key[0] == slot:
+                del self.host_store[key]
+        toks = self._prompt_tokens(req)
+        # single-sequence prefill merged into the batch cache at `slot`
+        one = ShapeConfig("p", len(toks), 1, "prefill")
+        c1 = self.model.init_cache(1, one)
+        logits, c1 = self._prefill(self.params,
+                                   {"tokens": jnp.asarray(toks)[None]}, c1)
+        self._merge_slot_cache(c1, slot, len(toks))
+        # prefilled blocks enter the pool under the insertion policy,
+        # without fetch cost (they were just produced on-device)
+        stype = int(self.pool.seq_type[slot])
+        for key in self._block_keys(req, len(toks)):
+            self.pool.insert_prefill(key, stype)
+
+    def _merge_slot_cache(self, c1, slot: int, length: int):
+        """Write a 1-sequence prefill cache into batch position `slot`."""
+        w = self.cache["kv_pos"].shape[1]
+        kv = self._kv_leaves()
+        src = c1["stack"]["scan"][next(iter(c1["stack"]["scan"]))]
+        s = min(length, w)
+        kv["k"] = kv["k"].at[:, slot, :s].set(src["k"][:, 0, :s])
+        kv["v"] = kv["v"].at[:, slot, :s].set(src["v"][:, 0, :s])
+        self.cache["len"] = self.cache["len"].at[slot].set(length)
+        kvp = np.full((w,), -1, np.int32)
+        for p in range(max(0, length - w), length):
+            kvp[p % w] = p
+        self.cache["kv_pos"] = self.cache["kv_pos"].at[slot].set(
+            jnp.asarray(kvp))
+
+    # -- main loop --------------------------------------------------------------
+
+    def run(self, requests: List[Request], max_steps: int = 2000):
+        pending = sorted(requests, key=lambda r: r.arrival)
+        done: List[Request] = []
+        ready_at = np.zeros(self.ecfg.max_slots)
+        tokens_out = 0
+        step = 0
+        while (pending or any(self.slots)) and step < max_steps:
+            now = float(step)
+            # admissions
+            for i, cur in enumerate(self.slots):
+                if cur is None and pending and pending[0].arrival <= now:
+                    self._admit(pending.pop(0), i, step)
+                    ready_at[i] = now
+            # residency transactions for the upcoming decode
+            active = np.zeros(self.ecfg.max_slots, bool)
+            for i, req in enumerate(self.slots):
+                if req is None or ready_at[i] > now:
+                    if req is not None:
+                        req.stall_steps += 1
+                    continue
+                length = int(self.cache["len"][i]) + 1
+                keys = self._block_keys(req, min(length, self.ecfg.max_len))
+                t_ready = now
+                for key in keys:
+                    t, fetched = self.pool.access(i, [key[1]], now,
+                                                  resident_key=key)
+                    # restore data for any fetched (non-resident) block;
+                    # bypassed (streamed) blocks are re-offloaded after the
+                    # step below
+                    if fetched:
+                        self._restore(key)
+                    t_ready = max(t_ready, t)
+                if t_ready > now:
+                    ready_at[i] = t_ready
+                    req.stall_steps += 1
+                else:
+                    active[i] = True
+            if active.any():
+                toks = np.zeros((self.ecfg.max_slots, 1), np.int32)
+                logits, new_cache = self._decode(self.params,
+                                                 jnp.asarray(toks),
+                                                 self.cache)
+                # commit only active slots
+                self.cache = _select_cache(new_cache, self.cache,
+                                           jnp.asarray(active))
+                for i, req in enumerate(self.slots):
+                    if req is None or not active[i]:
+                        continue
+                    req.generated += 1
+                    tokens_out += 1
+                    if req.first_token_step < 0:
+                        req.first_token_step = step
+                    if req.generated >= req.decode_len:
+                        req.finish_step = step
+                        done.append(req)
+                        self.slots[i] = None
+                # streamed (bypassed) blocks leave the device again
+                for i, req in enumerate(self.slots):
+                    if req is None or not active[i]:
+                        continue
+                    length = int(self.cache["len"][i])
+                    for key in self._block_keys(req, min(length, self.ecfg.max_len)):
+                        if key not in self.pool.resident and key in self.host_store:
+                            self._offload(key)
+            step += 1
+
+        snap = self.pool.snapshot()
+        lat = [r.finish_step - r.enqueue_step for r in done]
+        ttft = [r.first_token_step - r.enqueue_step for r in done
+                if r.first_token_step >= 0]
+        snap.update({
+            "steps": step,
+            "completed": len(done),
+            "tokens_out": tokens_out,
+            "throughput": tokens_out / max(step, 1),
+            "mean_latency": float(np.mean(lat)) if lat else float("nan"),
+            "p99_latency": float(np.percentile(lat, 99)) if lat else float("nan"),
+            "mean_ttft": float(np.mean(ttft)) if ttft else float("nan"),
+            "stall_steps": sum(r.stall_steps for r in done),
+        })
+        return snap
+
+
+def _select_cache(new, old, active_mask):
+    """Commit cache updates only for active batch slots."""
+
+    def sel(n, o):
+        if n.shape == ():
+            return n
+        # find the batch axis: stack leaves are [G, B, ...], top-level
+        # leaves are [B, ...]
+        if n.ndim >= 2 and n.shape[1] == active_mask.shape[0] and \
+                n.shape[0] != active_mask.shape[0]:
+            m = active_mask.reshape((1, -1) + (1,) * (n.ndim - 2))
+        elif n.shape[0] == active_mask.shape[0]:
+            m = active_mask.reshape((-1,) + (1,) * (n.ndim - 1))
+        else:
+            return n
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
+def run_ab(cfg: ModelConfig, wl: ServeWorkload, pool_cfg: PoolConfig,
+           ecfg: EngineConfig = EngineConfig(), seed: int = 0):
+    """A/B the MeDiC pool manager against LRU on the same workload."""
+    out = {}
+    for policy in ("lru", "medic"):
+        pc = dataclasses.replace(pool_cfg, policy=policy)
+        eng = ServeEngine(cfg, ecfg, pc)
+        reqs = generate_requests(wl, seed=seed)
+        out[policy] = eng.run(reqs)
+    return out

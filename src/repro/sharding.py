@@ -1,0 +1,212 @@
+"""Logical-axis sharding rules (MaxText-style) for MeDiC-JAX.
+
+Every parameter / activation dimension is tagged with a *logical* axis name;
+``build_rules`` maps logical axes onto mesh axes for the current mesh, and
+``spec_for`` resolves a tuple of logical names into a ``PartitionSpec``,
+dropping any assignment that does not divide the concrete dimension (so the
+same model code runs on the (16,16) production mesh, the (2,16,16) multi-pod
+mesh, and a 1-device CPU test mesh).
+
+Parallelism carried by each mesh axis:
+  pod    -- pure data parallelism across pods (only gradient all-reduce
+            crosses the slow inter-pod links)
+  data   -- data parallelism + FSDP (ZeRO-3 parameter/optimizer sharding
+            over the ``embed`` logical axis)
+  model  -- tensor parallelism (heads / mlp / vocab), expert parallelism
+            (``expert``), sequence parallelism of the residual stream
+            (``seq_sp``) and of the decode KV cache (``kv_seq``)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Order matters: earlier rules win a mesh axis; later rules that would reuse
+# an already-taken mesh axis on the same tensor are dropped.
+DEFAULT_LOGICAL_RULES: Tuple[Tuple[str, MeshAxes], ...] = (
+    ("batch", ("pod", "data")),
+    ("capacity", ("pod", "data")),
+    ("expert", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("lru", "model"),
+    ("seq_sp", "model"),      # sequence parallelism (residual stream)
+    ("kv_seq", "model"),      # decode KV-cache length sharding
+    ("embed", "data"),        # FSDP / ZeRO-3 on parameters
+    ("embed_act", None),      # activations keep embed replicated
+    ("layers", None),
+    ("seq", None),
+    ("head_dim", None),
+    ("image", None),
+    ("enc_seq", None),
+)
+
+
+def build_rules(mesh: Mesh,
+                overrides: Sequence[Tuple[str, MeshAxes]] = ()) -> Dict[str, MeshAxes]:
+    """Instantiate the logical->mesh mapping for a concrete mesh.
+
+    Mesh axes that the mesh does not have (e.g. ``pod`` on the single-pod
+    mesh) are removed from every rule.
+    """
+    present = set(mesh.axis_names)
+    rules: Dict[str, MeshAxes] = {}
+    merged = list(DEFAULT_LOGICAL_RULES) + list(overrides)
+    for name, axes in merged:
+        if axes is None:
+            rules[name] = None
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        kept = tuple(a for a in axes if a in present)
+        rules[name] = kept if kept else None
+    return rules
+
+
+def _mesh_axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(logical: Sequence[Optional[str]],
+             shape: Sequence[int],
+             mesh: Mesh,
+             rules: Dict[str, MeshAxes]) -> P:
+    """Resolve logical axis names -> PartitionSpec with divisibility fallback.
+
+    A logical axis is left unsharded when (a) it has no rule, (b) its mesh
+    axes are already used by an earlier dimension of this tensor, or (c) the
+    dimension size is not divisible by the mesh-axis product.
+    """
+    assert len(logical) == len(shape), (logical, shape)
+    used: set = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        axes = rules.get(name) if name is not None else None
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            out.append(None)
+            continue
+        size = _mesh_axis_size(mesh, axes)
+        if size == 1 or dim % size != 0:
+            # partial fallback: try a prefix of the axes tuple
+            while axes and (dim % _mesh_axis_size(mesh, axes) != 0):
+                axes = axes[:-1]
+            if not axes:
+                out.append(None)
+                continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def sharding_for(logical, shape, mesh, rules) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical, shape, mesh, rules))
+
+
+def tree_shardings(logical_tree, shape_tree, mesh, rules):
+    """Zip a logical-axes tree with a ShapeDtypeStruct tree -> NamedShardings."""
+    return jax.tree.map(
+        lambda lg, sd: sharding_for(lg.axes, sd.shape, mesh, rules),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, Logical),
+    )
+
+
+def tree_specs(logical_tree, shape_tree, mesh, rules):
+    return jax.tree.map(
+        lambda lg, sd: spec_for(lg.axes, sd.shape, mesh, rules),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, Logical),
+    )
+
+
+class Logical:
+    """A leaf marker carrying logical axis names for one array."""
+    __slots__ = ("axes",)
+
+    def __init__(self, *axes: Optional[str]):
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Logical{self.axes}"
+
+    def __eq__(self, other):
+        return isinstance(other, Logical) and self.axes == other.axes
+
+    def __hash__(self):
+        return hash(self.axes)
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context: model code calls shard_act(x, *logical_axes)
+# and the constraint resolves against the ambient (mesh, rules); it is a
+# no-op outside a sharding context (pure-CPU unit tests).
+# ---------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Dict[str, MeshAxes]] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = rules if rules is not None else build_rules(mesh)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def current_rules() -> Optional[Dict[str, MeshAxes]]:
+    return _CTX.rules
+
+
+def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names (no-op
+    without an ambient sharding context)."""
+    if _CTX.mesh is None or len(_CTX.mesh.devices) <= 1:
+        return x
+    spec = spec_for(logical, x.shape, _CTX.mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """make_mesh pinned to Auto axis types (portable across jax versions)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def single_device_mesh() -> Mesh:
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))

@@ -1,0 +1,143 @@
+"""Behavioural tests for the altitude-A MeDiC simulator — including the
+paper-claim validations (orderings from Fig 7, heterogeneity from Fig 2,
+stability from Fig 4, queueing from Fig 5)."""
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import workloads as WL
+from repro.core.simulator import SimParams, simulate
+
+PRM = SimParams()
+
+
+@functools.lru_cache(maxsize=64)
+def run(workload: str, policy_name: str, seed: int = 0):
+    spec = WL.WORKLOADS[workload]
+    tr = WL.generate(spec, seed=seed)
+    pol = {p.name: p for p in BL.ALL_NAMED}.get(policy_name) or BL.rand(0.5)
+    out = simulate(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+                   jnp.asarray(tr["compute_gap"]), n_warps=spec.n_warps,
+                   lanes=spec.lines_per_instr, prm=PRM, pol=pol)
+    return {k: np.asarray(v) for k, v in out.items()}, tr
+
+
+def test_counts_consistent():
+    out, tr = run("BFS", "Baseline")
+    total_requests = int((tr["lines"] >= 0).sum())
+    assert int(out["l2_accesses"]) + int(out["bypasses"]) == total_requests
+    assert int(out["l2_hits"]) <= int(out["l2_accesses"])
+    # every miss and every bypass goes to DRAM
+    assert int(out["dram_accesses"]) == total_requests - int(out["l2_hits"])
+
+
+def test_fig2_heterogeneity_spectrum():
+    """Warps must span the full hit-ratio range under the baseline."""
+    out, tr = run("BFS", "Baseline")
+    hr = out["warp_hit_ratio"]
+    assert hr.min() < 0.05
+    assert hr.max() > 0.9
+    assert 0.1 < np.median(hr) < 0.9 or (hr > 0.5).any()
+
+
+def test_fig4_stability_over_time():
+    """A warp's sampled ratio should correlate strongly between the two
+    halves of the kernel (temporal stability, no phase-shift workload)."""
+    out, tr = run("BFS", "Baseline")
+    rt = out["ratio_over_time"]          # [I, W]
+    half = rt.shape[0] // 2
+    a = rt[half - 8:half].mean(axis=0)
+    b = rt[-8:].mean(axis=0)
+    mask = (a > 0) | (b > 0)
+    corr = np.corrcoef(a[mask], b[mask])[0, 1]
+    assert corr > 0.8, corr
+
+
+def test_fig5_queueing_latencies_heavy_tail():
+    """Intensive workloads see queuing delays of tens-to-hundreds of
+    cycles at the shared cache (paper observation O3)."""
+    out, _ = run("BFS", "Baseline")
+    hist = out["qdelay_hist"]
+    # bins: 0,1,2,4,...,1024+ ; some requests must wait >= 64 cycles
+    assert hist[7:].sum() > 0
+    assert float(out["mean_qdelay"]) > 10.0
+
+
+def test_bypass_reduces_l2_load_and_miss_rate():
+    base, _ = run("BFS", "Baseline")
+    wbyp, _ = run("BFS", "WByp")
+    assert int(wbyp["bypasses"]) > 0
+    assert int(wbyp["l2_accesses"]) < int(base["l2_accesses"])
+    # bypassing miss-class warps leaves hit-heavy traffic at the L2
+    assert float(wbyp["miss_rate"]) < float(base["miss_rate"])
+
+
+def test_wip_protects_hot_warps():
+    base, tr = run("BFS", "Baseline")
+    wip, _ = run("BFS", "WIP")
+    hot = tr["archetype"] <= 1  # all_hit + mostly_hit archetypes
+    assert wip["warp_hit_ratio"][hot].mean() > \
+        base["warp_hit_ratio"][hot].mean()
+
+
+def test_medic_converts_warp_types():
+    """mostly-hit -> higher ratio; mostly-miss -> all-miss (paper goal)."""
+    base, tr = run("BFS", "Baseline")
+    medic, _ = run("BFS", "MeDiC")
+    mh = tr["archetype"] == 1
+    mm = tr["archetype"] == 3
+    assert medic["warp_hit_ratio"][mh].mean() > \
+        base["warp_hit_ratio"][mh].mean()
+    assert medic["warp_hit_ratio"][mm].mean() < 0.1
+
+
+@pytest.mark.parametrize("workload", ["BFS", "SSSP", "CONS"])
+def test_fig7_orderings(workload):
+    """Key orderings from the paper's evaluation on intensive workloads:
+    MeDiC > Baseline, MeDiC >= WByp, WByp > PCAL, MeDiC > PC-Byp."""
+    base, _ = run(workload, "Baseline")
+    medic, _ = run(workload, "MeDiC")
+    wbyp, _ = run(workload, "WByp")
+    pcal, _ = run(workload, "PCAL")
+    pcbyp, _ = run(workload, "PC-Byp")
+    b = float(base["ipc"])
+    assert float(medic["ipc"]) > 1.05 * b
+    assert float(medic["ipc"]) >= 0.98 * float(wbyp["ipc"])
+    assert float(wbyp["ipc"]) > float(pcal["ipc"])
+    assert float(medic["ipc"]) > float(pcbyp["ipc"])
+
+
+def test_fig8_energy_efficiency():
+    base, _ = run("BFS", "Baseline")
+    medic, _ = run("BFS", "MeDiC")
+    assert float(medic["perf_per_energy"]) > float(base["perf_per_energy"])
+
+
+def test_determinism():
+    a, _ = run("MST", "MeDiC", seed=3)
+    spec = WL.WORKLOADS["MST"]
+    tr = WL.generate(spec, seed=3)
+    out = simulate(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+                   jnp.asarray(tr["compute_gap"]), n_warps=spec.n_warps,
+                   lanes=spec.lines_per_instr, prm=PRM, pol=BL.MEDIC)
+    assert float(out["ipc"]) == pytest.approx(float(a["ipc"]))
+
+
+def test_wms_prioritizes_hot_misses():
+    """With the full MeDiC bypass load, the two-queue scheduler must not
+    slow hot warps; their mean round time should improve vs no-WMS."""
+    medic, tr = run("SSSP", "MeDiC")
+    # WByp+WIP without WMS
+    spec = WL.WORKLOADS["SSSP"]
+    from repro.core.simulator import Policy
+    nowms = Policy("nowms", bypass="medic", insertion="medic")
+    out = simulate(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+                   jnp.asarray(tr["compute_gap"]), n_warps=spec.n_warps,
+                   lanes=spec.lines_per_instr, prm=PRM, pol=nowms)
+    hot = tr["archetype"] <= 1
+    t_with = np.asarray(medic["warp_time"])[hot].mean()
+    t_without = np.asarray(out["warp_time"])[hot].mean()
+    assert t_with <= 1.05 * t_without

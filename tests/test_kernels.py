@@ -1,0 +1,166 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 3e-5, jnp.bfloat16: 4e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,hkv,d,window", [
+    (2, 256, 4, 2, 64, None),
+    (1, 256, 4, 4, 64, 128),
+    (2, 384, 6, 2, 64, None),
+    (1, 512, 8, 1, 32, 256),
+])
+def test_flash_attention_sweep(b, s, h, hkv, d, window, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = _randn((b, s, h, d), dtype)
+    k = _randn((b, s, hkv, d), dtype)
+    v = _randn((b, s, hkv, d), dtype)
+    o = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    r = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_matches_model_layer_math():
+    """Kernel semantics == the model's attention (same masking rules)."""
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    from repro.models.layers import attention_full
+    b, s, h, hkv, d = 2, 128, 4, 2, 32
+    q = _randn((b, s, h, d), jnp.float32)
+    k = _randn((b, s, hkv, d), jnp.float32)
+    v = _randn((b, s, hkv, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    o1 = attention_full(q, k, v, pos, pos, causal=True)
+    o2 = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention + gather
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hkv,g,d,npages,page,p", [
+    (3, 2, 4, 64, 16, 8, 4),
+    (2, 1, 8, 32, 8, 16, 3),
+    (1, 4, 1, 128, 32, 8, 8),
+])
+def test_paged_decode_attention_sweep(b, hkv, g, d, npages, page, p, dtype):
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    q = _randn((b, hkv, g, d), dtype)
+    kp = _randn((npages, page, hkv, d), dtype)
+    vp = _randn((npages, page, hkv, d), dtype)
+    tbl = RNG.permutation(npages)[: b * p].reshape(b, p).astype(np.int32)
+    tbl[0, -1] = -1  # a hole (non-resident block)
+    lens = np.minimum(RNG.integers(1, p * page, b), p * page).astype(np.int32)
+    o = paged_decode_attention(q, kp, vp, jnp.asarray(tbl),
+                               jnp.asarray(lens), interpret=True)
+    r = paged_decode_attention_ref(q, kp, vp, jnp.asarray(tbl),
+                                   jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_medic_gather(dtype):
+    from repro.kernels.medic_gather.ops import medic_gather
+    from repro.kernels.medic_gather.ref import medic_gather_ref
+    pool = _randn((12, 8, 2, 32), dtype)
+    tbl = jnp.asarray([[0, 5, -1], [3, -1, 11]], jnp.int32)
+    o = medic_gather(pool, tbl, interpret=True)
+    r = medic_gather_ref(pool, tbl)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,w,bt,bw", [
+    (2, 64, 256, 16, 128),
+    (1, 128, 128, 32, 64),
+    (3, 48, 384, 16, 128),
+])
+def test_rg_lru_sweep(b, s, w, bt, bw):
+    from repro.kernels.rg_lru.ops import rg_lru
+    from repro.kernels.rg_lru.ref import rg_lru_ref
+    a = jnp.asarray(RNG.uniform(0.8, 0.999, (b, s, w)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((b, s, w)) * 0.1, jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((b, w)), jnp.float32)
+    o = rg_lru(a, x, h0, bw=bw, bt=bt, interpret=True)
+    r = rg_lru_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_rg_lru_matches_model_scan():
+    from repro.kernels.rg_lru.ref import rg_lru_ref
+    from repro.models.recurrent import rglru_scan
+    a = jnp.asarray(RNG.uniform(0.8, 0.999, (2, 32, 64)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((2, 32, 64)), jnp.float32)
+    r1 = rg_lru_ref(a, b, jnp.zeros((2, 64)))
+    r2 = rglru_scan(a, b)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,dk,dv,chunk", [
+    (2, 128, 2, 32, 64, 32),
+    (1, 64, 4, 16, 32, 16),
+    (2, 96, 1, 64, 64, 32),
+])
+def test_mlstm_kernel_sweep(b, s, h, dk, dv, chunk):
+    from repro.kernels.mlstm.ops import mlstm
+    from repro.kernels.mlstm.ref import mlstm_ref
+    q = _randn((b, s, h, dk), jnp.float32)
+    k = _randn((b, s, h, dk), jnp.float32)
+    v = _randn((b, s, h, dv), jnp.float32)
+    li = _randn((b, s, h), jnp.float32)
+    lf = jnp.log(jax.nn.sigmoid(_randn((b, s, h), jnp.float32) + 2))
+    o = mlstm(q, k, v, li, lf, chunk=chunk, interpret=True)
+    r = mlstm_ref(q, k, v, li, lf)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=5e-4,
+                               rtol=5e-3)
+
+
+def test_mlstm_chunkwise_matches_recurrent():
+    """Model chunkwise form == exact recurrent form (state carrying)."""
+    from repro.models.xlstm import mlstm_chunkwise, mlstm_recurrent_ref
+    b, s, h, dk, dv = 2, 128, 2, 16, 32
+    q = _randn((b, s, h, dk), jnp.float32)
+    k = _randn((b, s, h, dk), jnp.float32)
+    v = _randn((b, s, h, dv), jnp.float32)
+    li = _randn((b, s, h), jnp.float32)
+    lf = jnp.log(jax.nn.sigmoid(_randn((b, s, h), jnp.float32) + 2))
+    o1, st1 = mlstm_chunkwise(q, k, v, li, lf, chunk=32)
+    o2, st2 = mlstm_recurrent_ref(q, k, v, li, lf)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=5e-4,
+                               rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(st1[0]), np.asarray(st2[0]),
+                               atol=5e-4, rtol=5e-3)

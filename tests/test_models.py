@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests (reduced configs) + model invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, ShapeConfig, get_config, \
+    shape_applicable
+from repro.models.model import build_model
+
+TINY_PREFILL = ShapeConfig("tiny_prefill", 32, 2, "prefill")
+
+
+def _batch(cfg, rng, b=2, s=32):
+    batch = {"tokens": jax.random.randint(rng, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            rng, (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            rng, (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced same-family config: one forward/train step on CPU with
+    shape + finiteness assertions (deliverable f)."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng)
+    batch = _batch(cfg, rng)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = model.init_params(rng)
+    batch = _batch(cfg, rng)
+    cache = model.init_cache(2, TINY_PREFILL)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = jax.jit(model.decode)(params, tok, cache)
+    assert bool(jnp.isfinite(logits2).all())
+    assert int(cache2["len"][0]) == int(cache["len"][0]) + 1
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "h2o_danube_1_8b",
+                                  "recurrentgemma_2b", "xlstm_125m"])
+def test_decode_matches_full_forward(arch):
+    """KV-cached decode logits == running the full sequence (teacher
+    forcing) — the cache-correctness invariant."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = model.init_params(rng)
+    s = 16
+    toks = jax.random.randint(rng, (1, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+
+    # cache must have capacity for the decoded token too (s+1 slots),
+    # otherwise the ring legitimately drops position 0
+    shape = ShapeConfig("t", s + 1, 1, "prefill")
+    cache = model.init_cache(1, shape)
+    logits_prefill, cache = model.prefill(params, batch, cache)
+
+    # decode one token and compare against prefilling s+1 tokens
+    nxt = jnp.asarray([[7]], jnp.int32)
+    logits_decode, _ = model.decode(params, nxt, cache)
+
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    shape2 = ShapeConfig("t2", s + 1, 1, "prefill")
+    cache2 = model.init_cache(1, shape2)
+    logits_ref, _ = model.prefill(params, {"tokens": toks2}, cache2)
+
+    np.testing.assert_allclose(np.asarray(logits_decode, np.float32),
+                               np.asarray(logits_ref, np.float32),
+                               rtol=0.08, atol=0.08)
+
+
+def test_causality_property():
+    """Changing a future token must not change past logits (dense arch)."""
+    cfg = get_config("granite_3_8b").reduced()
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(3)
+    params = model.init_params(rng)
+    toks = jax.random.randint(rng, (1, 16), 0, cfg.vocab_size)
+
+    def logits_at(tokens, pos):
+        # reuse loss machinery's forward: prefill returns last-pos only, so
+        # run through loss-style full logits via model internals
+        aux = model._aux_for(params, {"tokens": tokens}, "train")
+        x = model._embed(params, tokens)
+        from repro.models.stack import apply_stack
+        x, _, _ = apply_stack(cfg, model.stack, params["stack"], x, aux)
+        return model._head(params, x)[0, pos]
+
+    base = logits_at(toks, 5)
+    toks2 = toks.at[0, 10].set((int(toks[0, 10]) + 3) % cfg.vocab_size)
+    pert = logits_at(toks2, 5)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pert),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_attention_bounds_context():
+    """With SWA, a token far outside the window has no influence."""
+    cfg = get_config("h2o_danube_1_8b").reduced(sliding_window=8)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(4)
+    params = model.init_params(rng)
+    toks = jax.random.randint(rng, (1, 32), 0, cfg.vocab_size)
+
+    def last_logits(tokens):
+        aux = model._aux_for(params, {"tokens": tokens}, "train")
+        x = model._embed(params, tokens)
+        from repro.models.stack import apply_stack
+        x, _, _ = apply_stack(cfg, model.stack, params["stack"], x, aux)
+        return model._head(params, x)[0, -1]
+
+    base = last_logits(toks)
+    # layers stack windows: influence horizon = num_layers * window; token 0
+    # is outside it for 4 layers * 8 = 32 > 31... use a 1-layer variant
+    cfg1 = get_config("h2o_danube_1_8b").reduced(sliding_window=8,
+                                                 num_layers=1)
+    model1 = build_model(cfg1)
+    params1 = model1.init_params(rng)
+
+    def last1(tokens):
+        aux = model1._aux_for(params1, {"tokens": tokens}, "train")
+        x = model1._embed(params1, tokens)
+        from repro.models.stack import apply_stack
+        x, _, _ = apply_stack(cfg1, model1.stack, params1["stack"], x, aux)
+        return model1._head(params1, x)[0, -1]
+
+    b1 = last1(toks)
+    toks2 = toks.at[0, 2].set((int(toks[0, 2]) + 5) % cfg1.vocab_size)
+    b2 = last1(toks2)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_long_500k_applicability_matrix():
+    """Exactly the sub-quadratic archs run long_500k (DESIGN.md §5)."""
+    runs = {a: shape_applicable(get_config(a), SHAPES["long_500k"])[0]
+            for a in ARCH_IDS}
+    assert runs == {
+        "grok_1_314b": False, "olmoe_1b_7b": False,
+        "recurrentgemma_2b": True, "h2o_danube_1_8b": True,
+        "qwen1_5_110b": False, "qwen3_1_7b": False, "granite_3_8b": False,
+        "whisper_tiny": False, "llama_3_2_vision_11b": False,
+        "xlstm_125m": True,
+    }
+
+
+def test_param_counts_in_expected_range():
+    """Full configs land near their nameplate sizes."""
+    expected = {
+        "grok_1_314b": (280e9, 340e9),
+        "qwen1_5_110b": (95e9, 120e9),
+        "olmoe_1b_7b": (6e9, 8e9),
+        "qwen3_1_7b": (1.4e9, 2.2e9),
+        "granite_3_8b": (6.5e9, 9.5e9),
+        "h2o_danube_1_8b": (1.4e9, 2.2e9),
+        # 256k-vocab embed + head (untied) put rgemma above its nameplate
+        "recurrentgemma_2b": (2.2e9, 3.8e9),
+        "xlstm_125m": (0.10e9, 0.22e9),
+        "whisper_tiny": (0.02e9, 0.08e9),
+        "llama_3_2_vision_11b": (8e9, 12e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).num_params
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"

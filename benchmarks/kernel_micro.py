@@ -80,18 +80,28 @@ def kernel_micro():
     # simulator throughput (requests/second through the DES)
     from repro.core import baselines as BL
     from repro.core import workloads as WL
-    from repro.core.simulator import SimParams, simulate
+    from repro.core.simulator import SimParams, simulate, simulate_sweep
     spec = WL.WORKLOADS["BP"]
     tr = WL.generate(spec, seed=0)
     args = (jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
             jnp.asarray(tr["compute_gap"]))
     kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr,
-              prm=SimParams(), pol=BL.MEDIC)
-    simulate(*args, **kw)["ipc"].block_until_ready()
+              prm=SimParams())
+    simulate(*args, pol=BL.MEDIC, **kw)["ipc"].block_until_ready()
     t0 = time.perf_counter()
-    simulate(*args, **kw)["ipc"].block_until_ready()
+    simulate(*args, pol=BL.MEDIC, **kw)["ipc"].block_until_ready()
     dt = time.perf_counter() - t0
     nreq = int((tr["lines"] >= 0).sum())
     rows.append({"name": "simulator_des", "us_per_call": round(dt * 1e6, 0),
                  "derived": f"{nreq/dt/1e3:.0f} kreq/s"})
+
+    # vmapped policy sweep: all named policies in one jitted call
+    pols = list(BL.ALL_NAMED)
+    simulate_sweep(*args, pols, **kw)["ipc"].block_until_ready()
+    t0 = time.perf_counter()
+    simulate_sweep(*args, pols, **kw)["ipc"].block_until_ready()
+    dt = time.perf_counter() - t0
+    rows.append({"name": f"simulator_sweep_{len(pols)}pol",
+                 "us_per_call": round(dt * 1e6, 0),
+                 "derived": f"{len(pols)*nreq/dt/1e3:.0f} kreq/s"})
     return rows, {}

@@ -3,11 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV rows per benchmark plus the derived
 headline numbers (harmonic-mean speedups etc.). Run:
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR]
+                                            [--json PATH]
+
+``--json PATH`` additionally dumps a machine-readable record (one entry
+per benchmark: wall time, rows, derived headline numbers) in the
+``BENCH_*.json`` trajectory format, so perf can be tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -23,12 +30,32 @@ def _emit(name, rows, derived):
         print(f"derived,{name}.{k},{v}")
 
 
+def _jsonable(v):
+    try:
+        json.dumps(v)
+        return v
+    except TypeError:
+        return str(v)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="subset of workloads for a fast pass")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump per-benchmark us_per_call + derived numbers "
+                         "to a BENCH_*.json-compatible file")
     args = ap.parse_args()
+    if args.json:
+        # fail fast on an unwritable path instead of after the full run,
+        # without truncating an existing record or leaving a zero-byte
+        # file behind if the run crashes before the final dump
+        probe_created = not os.path.exists(args.json)
+        with open(args.json, "a"):
+            pass
+        if probe_created:
+            os.remove(args.json)
 
     from benchmarks import kernel_micro, paper_figures, serving_ab
     from repro.core import workloads as WL
@@ -45,6 +72,7 @@ def main() -> None:
         "kernel_micro": kernel_micro.kernel_micro,
     }
     t00 = time.time()
+    record = {"schema": "bench-v1", "quick": args.quick, "benchmarks": []}
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if args.only and args.only not in name:
@@ -54,8 +82,21 @@ def main() -> None:
         us = (time.time() - t0) * 1e6
         print(f"{name},{us:.0f},rows={len(rows)}")
         _emit(name, rows, derived)
+        record["benchmarks"].append({
+            "name": name,
+            "us_per_call": round(us),
+            "n_rows": len(rows),
+            "rows": [{k: _jsonable(v) for k, v in r.items()} for r in rows],
+            "derived": {k: _jsonable(v) for k, v in derived.items()},
+        })
         sys.stdout.flush()
-    print(f"\ntotal_wall_s,{time.time()-t00:.1f},")
+    total = time.time() - t00
+    record["total_wall_s"] = round(total, 1)
+    print(f"\ntotal_wall_s,{total:.1f},")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+        print(f"json,{args.json},")
 
 
 if __name__ == "__main__":

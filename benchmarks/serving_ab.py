@@ -26,6 +26,8 @@ def serving_ab():
             "p99_fetch_qdelay": round(s["p99_qdelay"], 2),
             "bypassed_blocks": int(s["bypassed_blocks"]),
             "stall_steps": int(s["stall_steps"]),
+            "fetches": int(s["fetches"]),
+            "resident_blocks": int(s["resident_blocks"]),
         })
     derived = {
         "medic_throughput_gain": round(

@@ -1,9 +1,10 @@
 """Quickstart: the MeDiC policy core in 60 seconds.
 
 Runs one memory-intensive workload through the altitude-A simulator under
-the baseline and full-MeDiC policies and prints the headline effects the
-paper predicts: bypass volume, queue-delay relief, warp-type conversion,
-and speedup.
+the baseline and full-MeDiC policies — both in a single vmapped
+`simulate_sweep` call (the branchless policy engine compiles once for any
+set of policies) — and prints the headline effects the paper predicts:
+bypass volume, queue-delay relief, warp-type conversion, and speedup.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +14,7 @@ import numpy as np
 from repro.core import baselines as BL
 from repro.core import warp_types as WT
 from repro.core import workloads as WL
-from repro.core.simulator import SimParams, simulate
+from repro.core.simulator import SimParams, simulate_sweep
 
 
 def main():
@@ -24,8 +25,9 @@ def main():
     kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr,
               prm=SimParams())
 
-    base = simulate(*args, pol=BL.BASELINE, **kw)
-    medic = simulate(*args, pol=BL.MEDIC, **kw)
+    sweep = simulate_sweep(*args, [BL.BASELINE, BL.MEDIC], **kw)
+    base = {k: v[0] for k, v in sweep.items()}
+    medic = {k: v[1] for k, v in sweep.items()}
 
     print(f"workload: {spec.name} ({spec.n_warps} warps, "
           f"{spec.n_instr} memory instructions each)")

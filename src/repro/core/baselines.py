@@ -2,7 +2,7 @@
 mechanisms from the paper's evaluation (§5, Fig 7)."""
 from __future__ import annotations
 
-from repro.core.simulator import Policy
+from repro.policy import Policy
 
 BASELINE = Policy("Baseline")                                     # LRU, FR-FCFS
 EAF = Policy("EAF", insertion="eaf")                              # [123]

@@ -16,6 +16,13 @@ Modelled structures (paper's evaluation fidelity, not RTL):
   * warp-type identification via per-warp hit/access counters (①) and
     warp-type-aware bypassing straight to the DRAM queue (②).
 
+Policy decisions go through the branchless `repro.policy` engine: the
+policy enters the jitted computation as a *traced* `PolicyArrays` pytree,
+so every policy shares ONE trace per workload shape, and `simulate_sweep`
+vmaps a stacked policy batch (optionally × seed-stacked traces) in a
+single jitted call — the whole Fig 7/8 sweep compiles once and runs
+batched (DESIGN.md §3).
+
 Approximation (recorded in DESIGN.md §8): requests are processed
 chronologically *within* an instruction round but rounds are processed in
 lockstep across warps, so far-ahead warps can observe slightly stale queue
@@ -25,17 +32,20 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import classifier as CLF
 from repro.core import warp_types as WT
+from repro.policy import Policy, PolicyArrays, ops as POL
+from repro.policy import stack_policies, to_arrays
 
 F32 = jnp.float32
 I32 = jnp.int32
+
+_hash = POL.hash_index
 
 
 # ---------------------------------------------------------------------------
@@ -70,17 +80,6 @@ class SimParams:
     e_static: float = 0.08     # per cycle of makespan
 
 
-@dataclasses.dataclass(frozen=True)
-class Policy:
-    """Which mechanism drives each decision point."""
-    name: str
-    bypass: str = "none"       # none | medic | pcal | pcbyp | rand
-    insertion: str = "lru"     # lru | medic | eaf
-    scheduler: str = "frfcfs"  # frfcfs | medic
-    rand_p: float = 0.5        # rand bypass probability
-    pcal_frac: float = 0.375   # fraction of warps holding tokens
-
-
 class SimState(NamedTuple):
     tags: jnp.ndarray          # i32[sets, ways] line addr or -1
     rrip: jnp.ndarray          # i32[sets, ways]
@@ -102,13 +101,6 @@ class SimState(NamedTuple):
 _QBINS = jnp.asarray([0, 1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 1 << 30],
                      jnp.float32)
 N_QBINS = 12
-
-
-def _hash(x, salt, mod):
-    h = (x.astype(jnp.uint32) * jnp.uint32(2654435761)
-         + jnp.uint32(salt) * jnp.uint32(0x9E3779B9))
-    h ^= h >> 15
-    return (h % jnp.uint32(mod)).astype(I32)
 
 
 def init_state(n_warps: int, prm: SimParams) -> SimState:
@@ -146,32 +138,22 @@ def init_state(n_warps: int, prm: SimParams) -> SimState:
 # one request
 # ---------------------------------------------------------------------------
 
-def _request_step(st: SimState, req, prm: SimParams, pol: Policy,
+def _request_step(st: SimState, req, prm: SimParams, pa: PolicyArrays,
                   tokens) -> tuple:
     t_arr, w, addr, pc, valid = req
     m = st.metrics
     wtype = st.clf.warp_type[w]
+    pidx = _hash(pc, 3, prm.pc_entries)
 
-    # ---- ② bypass decision -------------------------------------------------
-    if pol.bypass == "medic":
-        byp = WT.is_bypass_type(wtype)
-        # periodic probe so a reformed warp can be re-learned: every 8th
-        # access of a bypassing warp still takes the cache path
-        probe = (st.clf.accesses[w] % 8) == 0
-        byp = byp & ~probe
-    elif pol.bypass == "pcal":
-        byp = ~tokens[w]
-    elif pol.bypass == "pcbyp":
-        pidx = _hash(pc, 3, prm.pc_entries)
-        ratio = st.pc_hits[pidx] / jnp.maximum(st.pc_acc[pidx], 1)
-        byp = (st.pc_acc[pidx] > 32) & (ratio < 0.25)
-        probe = (st.pc_acc[pidx] % 16) == 0
-        byp = byp & ~probe
-    elif pol.bypass == "rand":
-        u = _hash(addr, 7, 65536).astype(F32) / 65536.0
-        byp = u < pol.rand_p
-    else:
-        byp = jnp.zeros((), bool)
+    # ---- ② bypass decision (branchless, repro.policy) ----------------------
+    # periodic probe so a reformed warp can be re-learned: every 8th access
+    # of a bypassing warp still takes the cache path
+    probe = (st.clf.accesses[w] % 8) == 0
+    rand_u = _hash(addr, 7, 65536).astype(F32) / 65536.0
+    byp = POL.bypass_decision(pa, wtype=wtype, probe=probe,
+                              token_bit=tokens[w],
+                              pc_hits=st.pc_hits[pidx],
+                              pc_acc=st.pc_acc[pidx], rand_u=rand_u)
     byp = byp & valid
 
     use_l2 = valid & ~byp
@@ -192,7 +174,7 @@ def _request_step(st: SimState, req, prm: SimParams, pol: Policy,
     rset = st.rrip[sidx]
     rset = jnp.where(hit, rset.at[hit_way].set(0), rset)
 
-    # ---- ③ fill + insertion ------------------------------------------------
+    # ---- ③ fill + insertion (branchless, repro.policy) ---------------------
     allocate = use_l2 & ~hit
     # SRRIP aging to make a victim available
     shift = prm.rrip_max - jnp.max(rset)
@@ -200,13 +182,9 @@ def _request_step(st: SimState, req, prm: SimParams, pol: Policy,
     victim = jnp.argmax(rset_aged)
     evicted = tset[victim]
 
-    if pol.insertion == "medic":
-        rank = WT.insertion_rank(wtype, prm.rrip_max - 1)
-    elif pol.insertion == "eaf":
-        ebit = st.eaf[_hash(addr, 5, prm.eaf_bits)] > 0
-        rank = jnp.where(ebit, 0, prm.rrip_max - 1)
-    else:  # lru-like: insert near MRU
-        rank = jnp.zeros((), I32)
+    ebit = st.eaf[_hash(addr, 5, prm.eaf_bits)] > 0
+    rank = POL.insertion_rank(pa, wtype=wtype, eaf_bit=ebit,
+                              rrip_max=prm.rrip_max)
 
     tags = st.tags.at[sidx, victim].set(jnp.where(allocate, addr, evicted))
     rrip = st.rrip.at[sidx].set(
@@ -223,7 +201,7 @@ def _request_step(st: SimState, req, prm: SimParams, pol: Policy,
     eaf = jnp.where(reset, jnp.zeros_like(eaf), eaf)
     eaf_ctr = jnp.where(reset, 0, eaf_ctr)
 
-    # ---- ④ DRAM two-queue FR-FCFS ------------------------------------------
+    # ---- ④ DRAM two-queue FR-FCFS (branchless, repro.policy) ---------------
     go_dram = valid & (byp | ~hit)
     t_dram_arr = jnp.where(byp, t_arr, t_head + prm.l2_lat)
     ch = _hash(addr // prm.row_lines, 4, prm.dram_channels)
@@ -231,10 +209,7 @@ def _request_step(st: SimState, req, prm: SimParams, pol: Policy,
     row_hit = (st.cur_row[ch] == row) & go_dram
     occ = jnp.where(row_hit, prm.occ_rowhit, prm.occ_rowmiss)
     lat = jnp.where(row_hit, prm.t_rowhit, prm.t_rowmiss)
-    if pol.scheduler == "medic":
-        hp = WT.is_priority_type(wtype)
-    else:
-        hp = jnp.zeros((), bool)
+    hp = POL.is_high_priority(pa, wtype)
     t0_hp = jnp.maximum(st.hp_free[ch], t_dram_arr)
     t0_lp = jnp.maximum(jnp.maximum(st.lp_free[ch], st.hp_free[ch]),
                         t_dram_arr)
@@ -255,7 +230,6 @@ def _request_step(st: SimState, req, prm: SimParams, pol: Policy,
                       mostly_hit_threshold=prm.mostly_hit_threshold,
                       mostly_miss_threshold=prm.mostly_miss_threshold,
                       weight=jnp.atleast_1d(valid.astype(I32)))
-    pidx = _hash(pc, 3, prm.pc_entries)
     pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
     pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
     tot_hits = st.tot_hits.at[w].add(hit.astype(I32))
@@ -284,26 +258,12 @@ def _request_step(st: SimState, req, prm: SimParams, pol: Policy,
 # full simulation
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("prm", "pol", "n_warps", "lanes"))
-def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
-             lanes: int, prm: SimParams, pol: Policy) -> Dict[str, Any]:
-    """Run one workload under one policy.
-
-    True discrete-event order: each outer step pops the globally earliest
-    ready warp and services its next memory instruction, so queue counters
-    are updated chronologically (up to intra-instruction lane skew).
-
-    trace_lines: i32[I, W, L]; trace_pcs: i32[I, W].
-    Returns metrics dict (all jnp arrays).
-    """
+def _simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
+                   *, n_warps: int, lanes: int,
+                   prm: SimParams) -> Dict[str, Any]:
+    """One workload × one policy. `pa` is a traced pytree — vmappable."""
     n_instr = trace_lines.shape[0]
-    n_tokens = max(1, int(round(pol.pcal_frac * n_warps)))
-    # PCAL: token assignment is first-come / scheduler-order, i.e. blind to
-    # warp type — modelled as a pseudo-random but fixed subset. The paper's
-    # criticism (high-reuse mostly-miss warps holding tokens while
-    # mostly-hit warps starve) emerges naturally.
-    tokens = _hash(jnp.arange(n_warps, dtype=I32), 11, 997) < (
-        997 * n_tokens // n_warps)
+    tokens = POL.pcal_tokens(pa, n_warps)
 
     # [W, I, ...] layout for per-warp program counters
     lines_wi = jnp.swapaxes(trace_lines, 0, 1)
@@ -326,7 +286,7 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
         valid = lines >= 0
 
         def body(s, r):
-            return _request_step(s, r, prm, pol, tokens)
+            return _request_step(s, r, prm, pa, tokens)
 
         reqs = (t_arr, jnp.full((lanes,), w, I32), lines,
                 jnp.full((lanes,), pc, I32), valid)
@@ -378,3 +338,58 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
         "mean_qdelay": m["qdelay_sum"] / jnp.maximum(m["l2_accesses"], 1),
     })
     return out
+
+
+@partial(jax.jit, static_argnames=("prm", "n_warps", "lanes"))
+def _simulate_one(trace_lines, trace_pcs, compute_gap, pa, *, n_warps: int,
+                  lanes: int, prm: SimParams) -> Dict[str, Any]:
+    return _simulate_core(trace_lines, trace_pcs, compute_gap, pa,
+                          n_warps=n_warps, lanes=lanes, prm=prm)
+
+
+@partial(jax.jit, static_argnames=("prm", "n_warps", "lanes"))
+def _simulate_batch(trace_lines, trace_pcs, compute_gap, pa_batch, *,
+                    n_warps: int, lanes: int, prm: SimParams):
+    one = partial(_simulate_core, n_warps=n_warps, lanes=lanes, prm=prm)
+    if trace_lines.ndim == 4:      # seed-stacked traces [S, I, W, L]
+        over_seeds = jax.vmap(one, in_axes=(0, 0, 0, None))
+        return jax.vmap(over_seeds, in_axes=(None, None, None, 0))(
+            trace_lines, trace_pcs, compute_gap, pa_batch)
+    return jax.vmap(one, in_axes=(None, None, None, 0))(
+        trace_lines, trace_pcs, compute_gap, pa_batch)
+
+
+def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
+             lanes: int, prm: SimParams, pol: Policy) -> Dict[str, Any]:
+    """Run one workload under one policy.
+
+    True discrete-event order: each outer step pops the globally earliest
+    ready warp and services its next memory instruction, so queue counters
+    are updated chronologically (up to intra-instruction lane skew).
+
+    The policy enters as a traced `PolicyArrays`, so every `Policy` preset
+    reuses the same compiled executable for a given workload shape.
+
+    trace_lines: i32[I, W, L]; trace_pcs: i32[I, W].
+    Returns metrics dict (all jnp arrays).
+    """
+    return _simulate_one(trace_lines, trace_pcs, compute_gap,
+                         to_arrays(pol), n_warps=n_warps, lanes=lanes,
+                         prm=prm)
+
+
+def simulate_sweep(trace_lines, trace_pcs, compute_gap,
+                   policies: Sequence[Policy], *, n_warps: int, lanes: int,
+                   prm: SimParams) -> Dict[str, Any]:
+    """Run a whole policy sweep in ONE jitted, vmapped call.
+
+    trace_lines may be [I, W, L] (one workload instance — outputs get a
+    leading policy axis P) or seed-stacked [S, I, W, L] (outputs get
+    leading axes [P, S]); trace_pcs/compute_gap follow suit.
+
+    Metrics match per-policy `simulate` calls bit-for-bit (the parity is
+    enforced by tests/test_policy_engine.py).
+    """
+    pa = stack_policies(policies)
+    return _simulate_batch(trace_lines, trace_pcs, compute_gap, pa,
+                           n_warps=n_warps, lanes=lanes, prm=prm)

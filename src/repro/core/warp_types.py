@@ -15,6 +15,7 @@ type <= MOSTLY_MISS, prioritize iff type >= MOSTLY_HIT).
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 ALL_MISS = 0
 MOSTLY_MISS = 1
@@ -43,6 +44,31 @@ def classify(hit_ratio, accesses, *, mostly_hit_threshold: float = 0.8,
     t = jnp.where(r >= 1.0 - _EPS, ALL_HIT, t)
     return jnp.where(accesses >= min_samples, t,
                      jnp.full_like(t, BALANCED))
+
+
+def classify_np(hit_ratio: float, accesses: int, *,
+                mostly_hit_threshold: float = 0.8,
+                mostly_miss_threshold: float = 0.2,
+                min_samples: int = 8) -> int:
+    """Scalar numpy mirror of `classify` for host-side control planes.
+
+    Comparisons happen in float32, exactly like the jnp version (weakly
+    typed python-float thresholds compare at the array dtype), so the two
+    agree bit-for-bit.
+    """
+    if accesses < min_samples:
+        return BALANCED
+    r = np.float32(hit_ratio)
+    t = BALANCED
+    if r <= np.float32(mostly_miss_threshold):
+        t = MOSTLY_MISS
+    if r <= np.float32(_EPS):
+        t = ALL_MISS
+    if r >= np.float32(mostly_hit_threshold):
+        t = MOSTLY_HIT
+    if r >= np.float32(1.0 - _EPS):
+        t = ALL_HIT
+    return t
 
 
 def is_bypass_type(warp_type):

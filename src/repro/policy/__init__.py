@@ -1,0 +1,30 @@
+"""Unified branchless policy engine (see DESIGN.md §3).
+
+One array-backed implementation of the paper's four MeDiC decision points —
+① classifier (via ``repro.core.classifier``), ② bypass, ③ insertion,
+④ two-queue scheduling priority — shared by the altitude-A simulator and
+the altitude-B serving pool:
+
+  * ``Policy``        — declarative preset (strings, for humans/presets);
+  * ``PolicyArrays``  — the same policy as a pytree of one-hot select
+    weights and scalar knobs, suitable for tracing and ``jax.vmap``;
+  * ``ops``           — pure, branchless decision functions driven by a
+    ``PolicyArrays`` (every mechanism's candidate decision is computed and
+    a one-hot dot-product selects the active one — no Python dispatch);
+  * ``DecisionTables`` — per-warp-type numpy lookup tables *derived from
+    the same ops*, for host-side control planes (the serving pool).
+
+Because a ``PolicyArrays`` is a traced argument (not a static one), every
+policy shares a single jit trace, and stacking policies along a leading
+axis turns a full policy sweep into one vmapped call
+(``core.simulator.simulate_sweep``).
+"""
+from repro.policy.spec import (BYPASS_MECHS, INSERT_MECHS, Policy,
+                               PolicyArrays, stack_policies, to_arrays)
+from repro.policy.tables import DecisionTables
+from repro.policy import ops
+
+__all__ = [
+    "BYPASS_MECHS", "INSERT_MECHS", "Policy", "PolicyArrays",
+    "stack_policies", "to_arrays", "DecisionTables", "ops",
+]

@@ -1,0 +1,76 @@
+"""Branchless policy decision ops (paper mechanisms ②③④).
+
+Every function computes the candidate decision of *each* mechanism on the
+menu and selects the active one with a one-hot dot product against the
+``PolicyArrays`` select weights — no Python dispatch, so a single jit
+trace covers every policy and a stacked ``PolicyArrays`` vmaps cleanly.
+
+Callers supply the raw signals a hardware decision point would see
+(current warp type, PC-table counters, PCAL token bit, a per-address
+uniform variate); the ops own the mechanism semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import warp_types as WT
+from repro.policy.spec import PolicyArrays
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def hash_index(x, salt, mod):
+    """Knuth-style multiplicative hash -> [0, mod). Shared by the
+    simulator's set/bank/channel indexing and the policy ops."""
+    h = (jnp.asarray(x).astype(jnp.uint32) * jnp.uint32(2654435761)
+         + jnp.uint32(salt) * jnp.uint32(0x9E3779B9))
+    h ^= h >> 15
+    return (h % jnp.uint32(mod)).astype(I32)
+
+
+def bypass_decision(pa: PolicyArrays, *, wtype, probe, token_bit,
+                    pc_hits, pc_acc, rand_u):
+    """② Should this request skip the shared cache?
+
+    wtype:     i32[] current warp/sequence type (mechanism "medic")
+    probe:     bool[] periodic re-learning probe (forces the cache path)
+    token_bit: bool[] PCAL token ownership (mechanism "pcal")
+    pc_hits/pc_acc: i32[] PC-table counters (mechanism "pcbyp")
+    rand_u:    f32[] uniform variate in [0,1) (mechanism "rand")
+    """
+    c_none = jnp.zeros(jnp.shape(wtype), bool)
+    c_medic = WT.is_bypass_type(wtype) & ~probe
+    c_pcal = ~token_bit
+    pc_ratio = pc_hits / jnp.maximum(pc_acc, 1)
+    pc_probe = (pc_acc % 16) == 0
+    c_pcbyp = (pc_acc > 32) & (pc_ratio < 0.25) & ~pc_probe
+    c_rand = rand_u < pa.rand_p
+    cand = jnp.stack([c_none, c_medic, c_pcal, c_pcbyp, c_rand]).astype(F32)
+    return jnp.tensordot(pa.bypass_sel, cand, axes=1) > 0.5
+
+
+def insertion_rank(pa: PolicyArrays, *, wtype, eaf_bit, rrip_max: int):
+    """③ RRIP insertion rank for a filled line/block.
+
+    eaf_bit: bool[] — the address was seen in the evicted-address filter.
+    """
+    r_lru = jnp.zeros(jnp.shape(wtype), I32)
+    r_medic = WT.insertion_rank(wtype, rrip_max - 1)
+    r_eaf = jnp.where(eaf_bit, 0, rrip_max - 1).astype(I32)
+    cand = jnp.stack([r_lru, r_medic, r_eaf]).astype(F32)
+    return jnp.round(jnp.tensordot(pa.ins_sel, cand, axes=1)).astype(I32)
+
+
+def is_high_priority(pa: PolicyArrays, wtype):
+    """④ Does this request take the strict-priority high queue?"""
+    return (pa.sched_medic > 0.5) & WT.is_priority_type(wtype)
+
+
+def pcal_tokens(pa: PolicyArrays, n_warps: int):
+    """PCAL token assignment: a pseudo-random but fixed subset of warps,
+    blind to warp type (first-come/scheduler-order in the paper)."""
+    n_tokens = jnp.maximum(
+        1, jnp.round(pa.pcal_frac * n_warps)).astype(I32)
+    return hash_index(jnp.arange(n_warps, dtype=I32), 11, 997) < (
+        997 * n_tokens // n_warps)

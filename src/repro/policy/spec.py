@@ -1,0 +1,77 @@
+"""Policy description: declarative preset + array-backed pytree form.
+
+``Policy`` keeps the human-readable preset (strings name the mechanism at
+each decision point). ``PolicyArrays`` is the form the compute paths use:
+one-hot select weights over the mechanism menus plus scalar knobs. It is a
+NamedTuple of jnp scalars/vectors, i.e. a pytree — it can be passed as a
+*traced* jit argument (one trace for all policies) and stacked along a
+leading axis for a vmapped policy sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+# mechanism menus — index order is the select-weight order everywhere
+BYPASS_MECHS = ("none", "medic", "pcal", "pcbyp", "rand")   # ②
+INSERT_MECHS = ("lru", "medic", "eaf")                      # ③
+SCHED_MECHS = ("frfcfs", "medic")                           # ④
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Which mechanism drives each decision point (declarative preset)."""
+    name: str
+    bypass: str = "none"       # none | medic | pcal | pcbyp | rand
+    insertion: str = "lru"     # lru | medic | eaf
+    scheduler: str = "frfcfs"  # frfcfs | medic
+    rand_p: float = 0.5        # rand bypass probability
+    pcal_frac: float = 0.375   # fraction of warps holding tokens
+
+    def __post_init__(self):
+        if self.bypass not in BYPASS_MECHS:
+            raise ValueError(f"unknown bypass mechanism {self.bypass!r}")
+        if self.insertion not in INSERT_MECHS:
+            raise ValueError(f"unknown insertion mechanism {self.insertion!r}")
+        if self.scheduler not in SCHED_MECHS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r}")
+
+
+class PolicyArrays(NamedTuple):
+    """A ``Policy`` as arrays. All leaves are jnp; a leading batch axis
+    (added by ``stack_policies``) makes this a stacked policy batch."""
+    bypass_sel: jnp.ndarray    # f32[5] one-hot over BYPASS_MECHS
+    ins_sel: jnp.ndarray       # f32[3] one-hot over INSERT_MECHS
+    sched_medic: jnp.ndarray   # f32[]  1.0 iff scheduler == "medic"
+    rand_p: jnp.ndarray        # f32[]
+    pcal_frac: jnp.ndarray     # f32[]
+
+
+def _one_hot(index: int, n: int) -> jnp.ndarray:
+    return jnp.zeros((n,), F32).at[index].set(1.0)
+
+
+def to_arrays(pol: Policy) -> PolicyArrays:
+    return PolicyArrays(
+        bypass_sel=_one_hot(BYPASS_MECHS.index(pol.bypass),
+                            len(BYPASS_MECHS)),
+        ins_sel=_one_hot(INSERT_MECHS.index(pol.insertion),
+                         len(INSERT_MECHS)),
+        sched_medic=jnp.asarray(1.0 if pol.scheduler == "medic" else 0.0,
+                                F32),
+        rand_p=jnp.asarray(pol.rand_p, F32),
+        pcal_frac=jnp.asarray(pol.pcal_frac, F32),
+    )
+
+
+def stack_policies(policies: Sequence[Policy]) -> PolicyArrays:
+    """Stack presets into one batched ``PolicyArrays`` (leading axis P)."""
+    if not policies:
+        raise ValueError("stack_policies needs at least one policy")
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[to_arrays(p) for p in policies])

@@ -220,7 +220,7 @@ class ServeEngine:
                         continue
                     length = int(self.cache["len"][i])
                     for key in self._block_keys(req, min(length, self.ecfg.max_len)):
-                        if key not in self.pool.resident and key in self.host_store:
+                        if not self.pool.is_resident(key) and key in self.host_store:
                             self._offload(key)
             step += 1
 

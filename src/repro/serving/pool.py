@@ -4,8 +4,8 @@ Maps the paper's four components onto the two-tier KV store of a TPU
 serving runtime (see DESIGN.md §2 table):
 
   ① sequence-type identification — per-sequence residency hit/access
-    counters via ``repro.core.classifier`` (the same code that classifies
-    warps in the altitude-A simulator);
+    counters via ``repro.core.classifier``'s taxonomy (the same code that
+    classifies warps in the altitude-A simulator);
   ② bypass — blocks fetched for mostly/all-miss sequences are *streamed*:
     landed for the step, never retained, so they neither pollute the pool
     nor occupy fetch-queue slots for retained traffic;
@@ -16,6 +16,17 @@ serving runtime (see DESIGN.md §2 table):
     sequences go to a strict-priority high queue; FCFS within queues over a
     modelled transfer engine (latency + bandwidth occupancy), mirroring the
     paper's two-queue FR-FCFS memory controller.
+
+The ②③④ decisions come from the shared branchless policy engine: a
+``PoolConfig.policy`` preset is lowered to ``repro.policy.DecisionTables``
+(numpy lookups evaluated once through the same ops the simulator jits), so
+both altitudes share one mechanism implementation.
+
+State is held in fixed-capacity numpy arrays (one row per budgeted block:
+owner key, RRIP rank, owner type, insertion sequence), so lookup,
+insertion-pressure aging, and victim selection are vectorized — the
+dict-based original survives as ``serving.pool_ref.DictPoolManager`` and a
+parity test pins this implementation to it.
 
 The manager tracks real block residency against a device-HBM budget; block
 payloads live in the engine's cache arrays and are offloaded/restored
@@ -30,6 +41,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import warp_types as WT
+from repro.policy import DecisionTables, Policy, to_arrays
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,25 +58,52 @@ class PoolConfig:
     policy: str = "medic"            # "medic" | "lru"
 
 
+# PoolConfig.policy presets, expressed in the unified policy engine
+POOL_POLICIES: Dict[str, Policy] = {
+    "medic": Policy("pool-medic", bypass="medic", insertion="medic",
+                    scheduler="medic"),
+    "lru": Policy("pool-lru"),
+}
+
+
 class MedicPoolManager:
-    """Residency + policy control plane. One instance per engine."""
+    """Residency + policy control plane. One instance per engine.
+
+    Array-backed: residency is a fixed-capacity table of ``budget_blocks``
+    rows; a free row has owner slot -1. Victim selection replicates the
+    reference dict semantics (max rank, earliest-inserted tie-break) via
+    an insertion-sequence column, and insertion-pressure aging is one
+    vectorized clamp instead of a per-key loop.
+    """
 
     def __init__(self, cfg: PoolConfig, max_seqs: int, on_evict=None):
         self.cfg = cfg
         self.max_seqs = max_seqs
         self.on_evict = on_evict or (lambda key: None)
-        # per-(seq-slot, block-index) residency; block key = (slot, idx);
-        # shared prefixes get their own pseudo-slots at the end
-        self.resident: Dict[Tuple[int, int], int] = {}   # key -> rrip rank
-        self.owner_type: Dict[Tuple[int, int], int] = {}
-        # classifier counters per slot (incl. pseudo-slots)
+        if cfg.policy not in POOL_POLICIES:
+            raise ValueError(f"unknown pool policy {cfg.policy!r}")
+        if cfg.budget_blocks < 1:
+            raise ValueError("budget_blocks must be >= 1")
+        self.tables = DecisionTables.from_arrays(
+            to_arrays(POOL_POLICIES[cfg.policy]), cfg.rrip_max)
+        # residency table: one row per budgeted block
+        cap = cfg.budget_blocks
+        self._slot = np.full(cap, -1, np.int64)    # owner seq slot (-1 free)
+        self._blk = np.full(cap, -1, np.int64)     # block index within owner
+        self._rank = np.zeros(cap, np.int64)       # RRIP rank
+        self._otype = np.full(cap, WT.BALANCED, np.int64)
+        self._ins_seq = np.zeros(cap, np.int64)    # insertion order tie-break
+        self._next_seq = 0
+        self._row: Dict[Tuple[int, int], int] = {}  # key -> row (O(1) find)
+        self._free = list(range(cap - 1, -1, -1))   # free rows (O(1) alloc)
+        # classifier counters per slot (incl. pseudo-slots) (①)
         self.hits = np.zeros(max_seqs, np.int64)
         self.accesses = np.zeros(max_seqs, np.int64)
         self.win_hits = np.zeros(max_seqs, np.int64)
         self.win_acc = np.zeros(max_seqs, np.int64)
         self.seq_type = np.full(max_seqs, WT.BALANCED, np.int64)
         self.ratio = np.full(max_seqs, 0.5, np.float64)
-        # two-queue transfer engine
+        # two-queue transfer engine (④)
         self.hp_free = 0.0
         self.lp_free = 0.0
         # metrics
@@ -73,6 +112,24 @@ class MedicPoolManager:
         self.qdelays: List[float] = []
         self.evictions_by_type = np.zeros(WT.NUM_TYPES, np.int64)
         self.bypassed_blocks = 0
+
+    # -- residency table helpers ---------------------------------------------
+
+    def _find(self, key: Tuple[int, int]) -> int:
+        """Row index of `key`, or -1 (hash index kept beside the arrays)."""
+        return self._row.get((int(key[0]), int(key[1])), -1)
+
+    def is_resident(self, key: Tuple[int, int]) -> bool:
+        return self._find(key) >= 0
+
+    @property
+    def resident(self) -> Dict[Tuple[int, int], int]:
+        """Residency as a key->rank dict (insertion order), for
+        introspection and the dict-parity tests."""
+        rows = np.nonzero(self._slot >= 0)[0]
+        rows = rows[np.argsort(self._ins_seq[rows], kind="stable")]
+        return {(int(self._slot[i]), int(self._blk[i])): int(self._rank[i])
+                for i in rows}
 
     # -- classification (①) -------------------------------------------------
 
@@ -84,19 +141,22 @@ class MedicPoolManager:
         if self.win_acc[slot] >= self.cfg.sampling_interval:
             r = self.win_hits[slot] / max(self.win_acc[slot], 1)
             self.ratio[slot] = r
-            self.seq_type[slot] = int(np.asarray(WT.classify(
-                np.float32(r), np.int32(self.win_acc[slot]),
+            self.seq_type[slot] = WT.classify_np(
+                r, int(self.win_acc[slot]),
                 mostly_hit_threshold=self.cfg.mostly_hit_threshold,
                 mostly_miss_threshold=self.cfg.mostly_miss_threshold,
-                min_samples=1)))
+                min_samples=1)
             self.win_hits[slot] = 0
             self.win_acc[slot] = 0
 
     def reset_slot(self, slot: int):
         """New sequence admitted into the slot: drop its blocks + counters."""
-        for key in [k for k in self.resident if k[0] == slot]:
-            del self.resident[key]
-            self.owner_type.pop(key, None)
+        mine = np.nonzero(self._slot == slot)[0]
+        self._slot[mine] = -1
+        self._blk[mine] = -1
+        self._free.extend(int(r) for r in mine)
+        for key in [k for k in self._row if k[0] == slot]:
+            del self._row[key]
         self.hits[slot] = self.accesses[slot] = 0
         self.win_hits[slot] = self.win_acc[slot] = 0
         self.seq_type[slot] = WT.BALANCED
@@ -112,24 +172,23 @@ class MedicPoolManager:
         `resident_key` overrides the residency key (shared-prefix blocks
         live under a pseudo-slot while counting toward `slot`'s ratio)."""
         cfg = self.cfg
-        medic = cfg.policy == "medic"
+        tb = self.tables
         stype = int(self.seq_type[slot])
         ready = now
         fetched = []
         for blk in blocks:
             key = resident_key if resident_key is not None else (slot, blk)
-            hit = key in self.resident
-            self._observe(slot, hit)
-            if hit:
+            row = self._find(key)
+            self._observe(slot, row >= 0)
+            if row >= 0:
                 # promotion: hit blocks move to rank 0 (MRU analogue)
-                self.resident[key] = 0
+                self._rank[row] = 0
                 continue
             # ---- miss -> fetch through the two-queue scheduler (④) -------
             self.fetches += 1
             self.fetch_bytes_blocks += 1
             fetched.append(blk)
-            hp = medic and WT.is_priority_type(np.int32(stype))
-            if hp:
+            if tb.hp_by_type[stype]:
                 t0 = max(self.hp_free, now)
                 self.hp_free = t0 + cfg.fetch_occupancy
             else:
@@ -138,41 +197,59 @@ class MedicPoolManager:
             self.qdelays.append(t0 - now)
             ready = max(ready, t0 + cfg.fetch_latency)
             # ---- insertion / bypass (②③) ---------------------------------
-            bypass = medic and WT.is_bypass_type(np.int32(stype))
-            if bypass:
+            if tb.bypass_by_type[stype]:
                 self.bypassed_blocks += 1
                 continue  # streamed: not retained
-            rank = (int(np.asarray(WT.insertion_rank(
-                np.int32(stype), cfg.rrip_max - 1))) if medic else 0)
-            self._insert(key, rank, stype)
+            self._insert(key, int(tb.rank_by_type[stype]), stype)
         return ready, fetched
 
     def _insert(self, key, rank: int, stype: int):
         cfg = self.cfg
-        while len(self.resident) >= cfg.budget_blocks:
-            victim = max(self.resident.items(), key=lambda kv: kv[1])[0]
-            vt = self.owner_type.pop(victim, WT.BALANCED)
-            self.evictions_by_type[vt] += 1
-            del self.resident[victim]
-            self.on_evict(victim)
-        # age everyone mildly on insertion pressure (RRIP-flavoured)
-        if len(self.resident) >= cfg.budget_blocks - 1:
-            for k in self.resident:
-                self.resident[k] = min(self.resident[k] + 1, cfg.rrip_max)
-        self.resident[key] = rank
-        self.owner_type[key] = stype
+        n = len(self._row)                       # resident count, O(1)
+        while n >= cfg.budget_blocks:
+            self._evict_one()
+            n -= 1
+        # age everyone mildly on insertion pressure (RRIP-flavoured) —
+        # one vectorized clamp, and only when actually near budget
+        if n >= cfg.budget_blocks - 1:
+            valid = self._slot >= 0
+            self._rank[valid] = np.minimum(self._rank[valid] + 1,
+                                           cfg.rrip_max)
+        row = self._find(key)
+        if row < 0:
+            row = self._free.pop()
+            self._slot[row], self._blk[row] = key
+            self._ins_seq[row] = self._next_seq
+            self._next_seq += 1
+            self._row[(int(key[0]), int(key[1]))] = row
+        self._rank[row] = rank
+        self._otype[row] = stype
+
+    def _evict_one(self):
+        """Evict the max-rank resident; ties break to the earliest-inserted
+        (the reference dict's iteration order)."""
+        valid = self._slot >= 0
+        ranked = np.where(valid, self._rank, -1)
+        cand = np.nonzero(ranked == ranked.max())[0]
+        victim = int(cand[np.argmin(self._ins_seq[cand])])
+        vt = int(self._otype[victim])
+        self.evictions_by_type[vt] += 1
+        key = (int(self._slot[victim]), int(self._blk[victim]))
+        self._slot[victim] = -1
+        self._blk[victim] = -1
+        self._row.pop(key, None)
+        self._free.append(victim)
+        self.on_evict(key)
 
     def insert_prefill(self, key, stype: int):
         """Blocks produced on-device at prefill: no fetch cost, but they
         enter the pool under the insertion/bypass policy."""
-        medic = self.cfg.policy == "medic"
-        if medic and WT.is_bypass_type(np.int32(stype)):
+        tb = self.tables
+        if tb.bypass_by_type[stype]:
             self.bypassed_blocks += 1
             self.on_evict(key)   # streamed immediately (not retained)
             return
-        rank = (int(np.asarray(WT.insertion_rank(
-            np.int32(stype), self.cfg.rrip_max - 1))) if medic else 0)
-        self._insert(key, rank, stype)
+        self._insert(key, int(tb.rank_by_type[stype]), stype)
 
     # -- metrics --------------------------------------------------------------
 
@@ -187,6 +264,6 @@ class MedicPoolManager:
             "qdelays": np.asarray(self.qdelays),
             "seq_hit_ratio": ratios,
             "seq_type": self.seq_type.copy(),
-            "resident_blocks": len(self.resident),
+            "resident_blocks": int((self._slot >= 0).sum()),
             "evictions_by_type": self.evictions_by_type.copy(),
         }

@@ -1,9 +1,10 @@
 """Unit + property tests for warp-type taxonomy and the online classifier."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 
 from repro.core import classifier as CLF

@@ -1,9 +1,10 @@
 """Sharding rule resolution + small-mesh end-to-end partitioning."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 from jax.sharding import Mesh, PartitionSpec as P
 

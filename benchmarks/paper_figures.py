@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines as BL
+from repro.core import tracegen as TG
 from repro.core import workloads as WL
 from repro.core.simulator import Policy, SimParams, simulate, simulate_sweep
 
@@ -24,39 +25,57 @@ PRM = SimParams()
 SWEEP_POLICIES: Tuple[Policy, ...] = tuple(BL.ALL_NAMED) + (
     BL.rand(0.25), BL.rand(0.5), BL.rand(0.75))
 
-_CACHE: Dict[Tuple[str, int], Dict[str, dict]] = {}
+# default seed block swept TOGETHER with the policy batch: traces come
+# seed-stacked from `tracegen.generate_batch`, so one jitted
+# `simulate_sweep` call per workload covers policies x seeds.
+FIG_SEEDS: Tuple[int, ...] = (0,)
+
+_CACHE: Dict[Tuple[str, Tuple[int, ...]], Dict[int, Dict[str, dict]]] = {}
 
 
-def _sweep(workload: str, seed: int = 0) -> Dict[str, dict]:
-    """All SWEEP_POLICIES on one workload, batched. Returns name->metrics."""
-    key = (workload, seed)
+def _sweep(workload: str, seed: int = 0,
+           seeds: Tuple[int, ...] = None) -> Dict[str, dict]:
+    """All SWEEP_POLICIES on one workload, batched over policies and the
+    seed block containing ``seed``. Returns name->metrics for ``seed``."""
+    if seeds is None or seed not in seeds:
+        seeds = FIG_SEEDS if seed in FIG_SEEDS else (seed,)
+    key = (workload, seeds)
     if key not in _CACHE:
-        spec = WL.WORKLOADS[workload]
-        tr = WL.generate(spec, seed=seed)
+        spec = TG.TraceSpec.from_workload(WL.WORKLOADS[workload])
+        tr = TG.generate_batch([spec], seeds)
         t0 = time.perf_counter()
         out = simulate_sweep(
-            jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
-            jnp.asarray(tr["compute_gap"]), SWEEP_POLICIES,
+            jnp.asarray(tr["lines"][0]), jnp.asarray(tr["pcs"][0]),
+            jnp.asarray(tr["compute_gap"][0]), SWEEP_POLICIES,
             n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM)
-        out = {k: np.asarray(v) for k, v in out.items()}
+        out = {k: np.asarray(v) for k, v in out.items()}   # [P, S, ...]
         wall = time.perf_counter() - t0
-        per: Dict[str, dict] = {}
-        for i, pol in enumerate(SWEEP_POLICIES):
-            d = {k: v[i] for k, v in out.items()}
-            d["sweep_wall_s"] = wall      # wall time of the WHOLE sweep
-            d["trace"] = tr
-            per[pol.name] = d
-        _CACHE[key] = per
-    return _CACHE[key]
+        by_seed: Dict[int, Dict[str, dict]] = {}
+        for si, s in enumerate(seeds):
+            per: Dict[str, dict] = {}
+            for i, pol in enumerate(SWEEP_POLICIES):
+                d = {k: v[i, si] for k, v in out.items()}
+                d["sweep_wall_s"] = wall  # wall time of the WHOLE sweep
+                d["trace"] = {
+                    "lines": tr["lines"][0, si],
+                    "pcs": tr["pcs"][0, si],
+                    "compute_gap": tr["compute_gap"][0, si],
+                    "archetype": tr["archetype"][0, si],
+                }
+                per[pol.name] = d
+            by_seed[s] = per
+        _CACHE[key] = by_seed
+    return _CACHE[key][seed]
 
 
 _BY_NAME: Dict[str, Policy] = {p.name: p for p in SWEEP_POLICIES}
 _OFF_SWEEP_CACHE: Dict[Tuple[str, Policy, int], dict] = {}
 
 
-def _run(workload: str, pol: Policy, seed: int = 0) -> dict:
+def _run(workload: str, pol: Policy, seed: int = 0,
+         seeds: Tuple[int, ...] = None) -> dict:
     if _BY_NAME.get(pol.name) == pol:
-        return _sweep(workload, seed)[pol.name]
+        return _sweep(workload, seed, seeds)[pol.name]
     # off-sweep policy (e.g. BL.RAND_SWEEP points): one-off run — still no
     # retrace, since the policy enters `simulate` as a traced pytree
     key = (workload, pol, seed)
@@ -129,22 +148,34 @@ def fig5_queueing(workload="BFS"):
 # Fig 7 — performance of MeDiC vs all baselines over 15 workloads
 # ---------------------------------------------------------------------------
 
-def fig7_performance(workloads=WL.WORKLOAD_NAMES):
+def fig7_performance(workloads=WL.WORKLOAD_NAMES, seeds=(0,)):
+    """Speedup table. With several ``seeds`` the per-workload speedup is
+    the mean over seeds, and every seed of a workload comes out of the
+    same seed-stacked `simulate_sweep` call (tracegen.generate_batch)."""
+    seeds = tuple(seeds)
     policies = list(BL.ALL_NAMED)
     rows = []
     speedups: Dict[str, List[float]] = {p.name: [] for p in policies}
     speedups["Rand(ideal)"] = []
     for wl in workloads:
-        base = float(_run(wl, BL.BASELINE)["ipc"])
+        per_pol: Dict[str, List[float]] = {p.name: [] for p in policies}
+        ideal: List[float] = []
+        for sd in seeds:
+            base = float(_run(wl, BL.BASELINE, sd, seeds)["ipc"])
+            for pol in policies:
+                per_pol[pol.name].append(
+                    float(_run(wl, pol, sd, seeds)["ipc"]) / base)
+            # idealized Rand: best bypass probability per workload
+            # (paper fn.3)
+            ideal.append(max(
+                float(_run(wl, BL.rand(p), sd, seeds)["ipc"]) / base
+                for p in (0.25, 0.5, 0.75)))
         for pol in policies:
-            ipc = float(_run(wl, pol)["ipc"])
-            s = ipc / base
+            s = float(np.mean(per_pol[pol.name]))
             speedups[pol.name].append(s)
             rows.append({"workload": wl, "policy": pol.name,
                          "speedup": round(s, 4)})
-        # idealized Rand: best bypass probability per workload (paper fn.3)
-        best = max(float(_run(wl, BL.rand(p))["ipc"]) / base
-                   for p in (0.25, 0.5, 0.75))
+        best = float(np.mean(ideal))
         speedups["Rand(ideal)"].append(best)
         rows.append({"workload": wl, "policy": "Rand(ideal)",
                      "speedup": round(best, 4)})
@@ -159,6 +190,8 @@ def fig7_performance(workloads=WL.WORKLOAD_NAMES):
         hmean(speedups["MeDiC"]) / max(hmean(speedups["PCAL"]),
                                        hmean(speedups["EAF"]),
                                        hmean(speedups["PC-Byp"])), 4)
+    if len(seeds) > 1:
+        derived["n_seeds"] = len(seeds)
     return rows, derived
 
 

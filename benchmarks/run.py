@@ -57,7 +57,8 @@ def main() -> None:
         if probe_created:
             os.remove(args.json)
 
-    from benchmarks import kernel_micro, paper_figures, serving_ab
+    from benchmarks import (kernel_micro, paper_figures, serving_ab,
+                            tracegen_bench)
     from repro.core import workloads as WL
 
     wls = ("BFS", "SSSP", "BP", "CONS") if args.quick else WL.WORKLOAD_NAMES
@@ -68,6 +69,8 @@ def main() -> None:
         "fig5_queueing": lambda: paper_figures.fig5_queueing(),
         "fig7_performance": lambda: paper_figures.fig7_performance(wls),
         "fig8_energy": lambda: paper_figures.fig8_energy(wls),
+        "tracegen_scale": lambda: tracegen_bench.tracegen_scale(
+            loop_sample=1 if args.quick else 3),
         "serving_ab": serving_ab.serving_ab,
         "kernel_micro": kernel_micro.kernel_micro,
     }

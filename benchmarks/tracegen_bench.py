@@ -1,0 +1,76 @@
+"""Trace-generation throughput benchmark (ISSUE 2 acceptance numbers).
+
+Measures, at n_warps=1024:
+
+  * the vectorized sampler generating the FULL 15-workload suite
+    (``vec_suite_s`` — the wall-clock the tier-2 CI job budgets);
+  * the loop reference generator on a sampled subset of workloads,
+    extrapolated to the suite (``loop_suite_est_s`` — running all 15
+    through the Python loop would take minutes, which is the point);
+  * ``speedup_vs_loop`` = loop_suite_est_s / vec_suite_s (acceptance
+    floor: >= 10x);
+  * the stress scenario matrix (warps in the thousands) end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import tracegen as TG
+from repro.core import workloads as WL
+
+SCALE_WARPS = 1024
+
+
+def _scaled_specs() -> List[TG.TraceSpec]:
+    return [dataclasses.replace(TG.TraceSpec.from_workload(s),
+                                n_warps=SCALE_WARPS)
+            for s in WL.WORKLOADS.values()]
+
+
+def tracegen_scale(loop_sample: int = 1) -> Tuple[List[dict], Dict]:
+    specs = _scaled_specs()
+    rows = []
+
+    t0 = time.perf_counter()
+    batch = TG.generate_batch(specs, seeds=(0,))
+    vec_suite_s = time.perf_counter() - t0
+    cells = int(batch["lines"].size)
+    rows.append({"path": "vectorized", "workloads": len(specs),
+                 "n_warps": SCALE_WARPS, "cells": cells,
+                 "wall_s": round(vec_suite_s, 3)})
+
+    loop_s = 0.0
+    for spec in specs[:loop_sample]:
+        t0 = time.perf_counter()
+        TG.generate_ref(spec, 0)
+        loop_s += time.perf_counter() - t0
+    loop_suite_est_s = loop_s / loop_sample * len(specs)
+    rows.append({"path": "loop_ref", "workloads": loop_sample,
+                 "n_warps": SCALE_WARPS,
+                 "cells": cells // len(specs) * loop_sample,
+                 "wall_s": round(loop_s, 3)})
+
+    stress_s = {}
+    for name, spec in TG.STRESS_SPECS.items():
+        t0 = time.perf_counter()
+        TG.generate(spec, 0)
+        stress_s[name] = time.perf_counter() - t0
+        rows.append({"path": f"stress:{name}", "workloads": 1,
+                     "n_warps": spec.n_warps,
+                     "cells": spec.n_instr * spec.n_warps
+                     * spec.lines_per_instr,
+                     "wall_s": round(stress_s[name], 3)})
+
+    derived = {
+        "vec_suite_s": round(vec_suite_s, 3),
+        "vec_mcells_per_s": round(cells / vec_suite_s / 1e6, 1),
+        "loop_sampled_workloads": loop_sample,
+        "loop_suite_est_s": round(loop_suite_est_s, 1),
+        "speedup_vs_loop": round(loop_suite_est_s / vec_suite_s, 1),
+        "stress_matrix_s": round(sum(stress_s.values()), 3),
+        "stress_max_warps": max(s.n_warps for s in
+                                TG.STRESS_SPECS.values()),
+    }
+    return rows, derived

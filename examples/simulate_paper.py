@@ -1,6 +1,10 @@
 """Reproduce the paper's headline table (Fig 7) over all 15 workloads.
 
-    PYTHONPATH=src python examples/simulate_paper.py [--quick]
+    PYTHONPATH=src python examples/simulate_paper.py [--quick] [--seeds N]
+
+``--seeds N`` averages each speedup over N trace seeds; the seeds ride
+the policy sweep in one jitted call per workload (the vectorized
+tracegen path stacks them via ``generate_batch``).
 """
 import argparse
 
@@ -8,13 +12,21 @@ import argparse
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    def positive_int(v):
+        n = int(v)
+        if n < 1:
+            raise argparse.ArgumentTypeError("need at least 1 seed")
+        return n
+
+    ap.add_argument("--seeds", type=positive_int, default=1, metavar="N",
+                    help="trace seeds per workload (default 1)")
     args = ap.parse_args()
 
     from benchmarks.paper_figures import fig7_performance
     from repro.core.workloads import WORKLOAD_NAMES
 
     wls = ("BFS", "SSSP", "BP", "CONS") if args.quick else WORKLOAD_NAMES
-    rows, derived = fig7_performance(wls)
+    rows, derived = fig7_performance(wls, seeds=tuple(range(args.seeds)))
 
     policies = []
     for r in rows:

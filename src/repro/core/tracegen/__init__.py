@@ -1,0 +1,34 @@
+"""Vectorized trace-generation subsystem (ISSUE 2 tentpole).
+
+Replaces the triple-nested Python loop in the original
+``repro.core.workloads.generate`` with a counter-based design:
+
+  * ``spec.py``   — ``TraceSpec`` + ``lower()``: archetype mixtures are
+    lowered to per-warp parameter arrays (working-set sizes, reuse and
+    shared-pool probabilities per kernel half, working-set tables, PC
+    tables) and a disjoint address-space layout;
+  * ``rng.py``    — splitmix64-style counter RNG: every random draw is a
+    pure function of ``(key, tag, index)``, so the loop reference and the
+    vectorized sampler agree bit-for-bit;
+  * ``sampler.py``— pure-numpy batched sampler materializing ``lines``
+    and ``pcs`` for all I×W×L cells (and all seeds / specs) at once, plus
+    ``generate_batch`` whose stacked output feeds ``simulate_sweep``;
+  * ``ref.py``    — the legacy-shaped loop generator (per warp, per
+    instruction, per lane) kept as the exact-parity reference;
+  * ``stress.py`` — scheduler-stress scenario matrix with warp counts in
+    the thousands (queue-hammering, phase-shift-heavy, shared-pool-
+    dominated frontiers).
+
+See DESIGN.md §"Trace generation" for the lowering contract.
+"""
+from repro.core.tracegen.ref import generate_ref
+from repro.core.tracegen.sampler import generate, generate_batch
+from repro.core.tracegen.spec import (ARCHETYPES, AddressLayout, TraceSpec,
+                                      WarpParams, lower, trace_key)
+from repro.core.tracegen.stress import STRESS_SPECS
+
+__all__ = [
+    "ARCHETYPES", "AddressLayout", "TraceSpec", "WarpParams", "lower",
+    "trace_key", "generate", "generate_batch", "generate_ref",
+    "STRESS_SPECS",
+]

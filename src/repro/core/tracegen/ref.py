@@ -1,0 +1,92 @@
+"""Loop reference generator — the legacy triple-nested shape, kept as the
+exact-parity oracle for the vectorized sampler.
+
+Walks warps → instructions → lanes exactly like the original
+``workloads.generate`` did, but draws every random value from the
+counter RNG at the cell's own (tag, index) coordinate, so it must agree
+with ``sampler.generate`` bit-for-bit (tests/test_tracegen.py runs the
+differential over every workload at 3 seeds). Scalar Python-int RNG
+mirrors (``rng.*_scalar``) keep the loop tolerably fast; their equality
+with the array versions is itself under test.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.tracegen import rng
+from repro.core.tracegen.spec import TraceSpec, make_layout, trace_key
+
+
+def generate_ref(spec: TraceSpec, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Same output contract as ``sampler.generate``."""
+    layout = make_layout(spec)
+    tab = spec.archetype_table()
+    n_arch = tab.shape[0]
+    max_ws = max(int(tab[:, 0].max()), 1)
+    cum = np.cumsum(np.asarray(spec.mix, np.float64))
+    i_n, w_n, l_n = spec.n_instr, spec.n_warps, spec.lines_per_instr
+
+    root = trace_key(spec.name, seed)
+    k_arch = rng.stream_key_scalar(root, rng.TAG_ARCH)
+    k_phase = rng.stream_key_scalar(root, rng.TAG_PHASE)
+    k_pick = rng.stream_key_scalar(root, rng.TAG_PHASE_PICK)
+    k_ws = rng.stream_key_scalar(root, rng.TAG_WS)
+    k_pc = rng.stream_key_scalar(root, rng.TAG_PC)
+    k_pool = rng.stream_key_scalar(root, rng.TAG_POOL)
+    k_reuse = rng.stream_key_scalar(root, rng.TAG_REUSE_U)
+    k_shared_u = rng.stream_key_scalar(root, rng.TAG_SHARED_U)
+    k_shared_idx = rng.stream_key_scalar(root, rng.TAG_SHARED_IDX)
+    k_ws_idx = rng.stream_key_scalar(root, rng.TAG_WS_IDX)
+
+    pool = [rng.randint_scalar(k_pool, p, layout.pool_region)
+            for p in range(spec.shared_pool_lines)]
+
+    lines = np.full((i_n, w_n, l_n), -1, np.int32)
+    pcs = np.zeros((i_n, w_n), np.int32)
+    arch1_out = np.zeros((w_n,), np.int32)
+    arch2_out = np.zeros((w_n,), np.int32)
+    half_at = i_n // 2
+
+    for wi in range(w_n):
+        u = rng.uniform_scalar(k_arch, wi)
+        arch1 = min(int(np.searchsorted(cum, u, side="right")), n_arch - 1)
+        arch2 = arch1
+        if spec.phase_shift:
+            if rng.uniform_scalar(k_phase, wi) < spec.phase_flip_prob:
+                arch2 = rng.randint_scalar(k_pick, wi, n_arch)
+        arch1_out[wi], arch2_out[wi] = arch1, arch2
+
+        wkey = rng.bits_scalar(k_ws, wi)
+        ws_base = int(layout.ws_base(wi))
+        ws = [ws_base + rng.perm12_scalar(j, wkey) for j in range(max_ws)]
+        pcs_w = [rng.randint_scalar(k_pc, wi * spec.n_pcs + j, 1 << 16)
+                 for j in range(spec.n_pcs)]
+        params = {a: (int(tab[a, 0]), float(tab[a, 1]), float(tab[a, 2]))
+                  for a in (arch1, arch2)}
+
+        for ii in range(i_n):
+            ws_size, reuse, shared = params[arch1 if ii < half_at else arch2]
+            pcs[ii, wi] = pcs_w[ii % spec.n_pcs]
+            for li in range(l_n):
+                flat = (ii * w_n + wi) * l_n + li
+                u = rng.uniform_scalar(k_reuse, flat)
+                u2 = rng.uniform_scalar(k_shared_u, flat)
+                if ws_size and u < reuse:
+                    if shared and u2 < shared:
+                        lines[ii, wi, li] = pool[rng.randint_scalar(
+                            k_shared_idx, flat, spec.shared_pool_lines)]
+                    else:
+                        lines[ii, wi, li] = ws[rng.randint_scalar(
+                            k_ws_idx, flat, max(ws_size, 1))]
+                else:
+                    lines[ii, wi, li] = layout.fresh_addr(wi, ii * l_n + li)
+
+    return {
+        "lines": lines,
+        "pcs": pcs,
+        "compute_gap": spec.compute_gap,
+        "archetype": arch1_out,
+        "archetype2": arch2_out,
+    }

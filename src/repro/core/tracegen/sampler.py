@@ -1,0 +1,119 @@
+"""Pure-numpy batched trace sampler.
+
+Materializes ``lines``/``pcs`` for every (instruction, warp, lane) cell —
+and every seed — in one set of array ops. Each cell's branch structure
+mirrors the original loop generator:
+
+    u < reuse?   ──no──►  streaming address (positional fresh slot)
+        │yes
+    u2 < shared? ──no──►  private working-set line
+        │yes
+        └──────────────►  shared-pool line
+
+but every uniform/index is a counter-RNG draw addressed by the cell's
+flat index, so the result is independent of evaluation order and
+bit-identical to ``ref.generate_ref`` (tests/test_tracegen.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core.tracegen import rng
+from repro.core.tracegen.spec import TraceSpec, lower, trace_key
+
+
+def _sample_cells(spec: TraceSpec, seeds) -> Dict[str, np.ndarray]:
+    """All cells for all seeds: lines i32[S, I, W, L], pcs i32[S, I, W]."""
+    seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+    n_seeds = len(seeds)
+    i_n, w_n, l_n = spec.n_instr, spec.n_warps, spec.lines_per_instr
+    layout, wp = lower(spec, seeds)
+
+    roots = np.asarray([trace_key(spec.name, int(s)) for s in seeds],
+                       np.uint64).reshape(-1, 1, 1, 1)            # [S,1,1,1]
+    ii = np.arange(i_n, dtype=np.int64)[:, None, None]            # [I,1,1]
+    wi = np.arange(w_n, dtype=np.int64)[None, :, None]            # [1,W,1]
+    li = np.arange(l_n, dtype=np.int64)[None, None, :]            # [1,1,L]
+    flat = ((ii * w_n + wi) * l_n + li).astype(np.uint64)[None]   # [1,I,W,L]
+
+    # per-half archetype scalars, gathered to [S, I, W, 1]
+    sg = np.arange(n_seeds)[:, None, None, None]                  # [S,1,1,1]
+    ig = (np.arange(i_n) >= i_n // 2).astype(np.int64)[
+        None, :, None, None]                                      # [1,I,1,1]
+    wg = np.arange(w_n)[None, None, :, None]                      # [1,1,W,1]
+    ws_size_t = wp.ws_size[sg, wg, ig]                            # [S,I,W,1]
+    reuse_t = wp.reuse[sg, wg, ig]
+    shared_t = wp.shared[sg, wg, ig]
+
+    u = rng.uniform(rng.stream_key(roots, rng.TAG_REUSE_U), flat)
+    reuse_hit = (ws_size_t > 0) & (u < reuse_t)
+    u2 = rng.uniform(rng.stream_key(roots, rng.TAG_SHARED_U), flat)
+    use_shared = reuse_hit & (shared_t > 0) & (u2 < shared_t)
+
+    pool_idx = rng.randint(rng.stream_key(roots, rng.TAG_SHARED_IDX),
+                           flat, spec.shared_pool_lines)
+    shared_line = wp.pool[sg, pool_idx]                           # [S,I,W,L]
+
+    ws_idx = rng.randint(rng.stream_key(roots, rng.TAG_WS_IDX), flat,
+                         np.maximum(ws_size_t, 1))
+    ws_line = wp.ws_table[sg, wg, ws_idx]                         # [S,I,W,L]
+
+    fresh_line = layout.fresh_addr(wi[None], ii[None] * l_n + li[None])
+
+    lines = np.where(use_shared, shared_line,
+                     np.where(reuse_hit, ws_line, fresh_line))
+
+    pcs = wp.pc_table[np.arange(n_seeds)[:, None, None],
+                      np.arange(w_n)[None, None, :],
+                      (np.arange(i_n) % spec.n_pcs)[None, :, None]]
+    return {
+        "lines": lines.astype(np.int32),
+        "pcs": pcs.astype(np.int32),
+        "archetype": wp.arch1.astype(np.int32),                   # [S, W]
+        "archetype2": wp.arch2.astype(np.int32),
+    }
+
+
+def generate(spec: TraceSpec, seed: int = 0) -> Dict[str, np.ndarray]:
+    """One (spec, seed) trace with the original ``workloads.generate``
+    output contract: lines i32[I, W, L], pcs i32[I, W], compute_gap f32,
+    archetype i32[W] (+ archetype2 for the stability tests)."""
+    out = _sample_cells(spec, [seed])
+    return {
+        "lines": out["lines"][0],
+        "pcs": out["pcs"][0],
+        "compute_gap": spec.compute_gap,
+        "archetype": out["archetype"][0],
+        "archetype2": out["archetype2"][0],
+    }
+
+
+def generate_batch(specs: Sequence[TraceSpec],
+                   seeds: Sequence[int]) -> Dict[str, np.ndarray]:
+    """Stacked traces for ``specs`` × ``seeds``, shaped to feed
+    ``simulate_sweep`` directly:
+
+        lines i32[N, S, I, W, L], pcs i32[N, S, I, W],
+        compute_gap f32[N, S], archetype i32[N, S, W]
+
+    Reshaping the leading two axes to one [N*S] axis gives the
+    seed-stacked trace format ``simulate_sweep`` vmaps over, so one
+    jitted call sweeps policies × seeds × workloads. All specs must share
+    (n_instr, n_warps, lines_per_instr) — the trace shape.
+    """
+    shapes = {(s.n_instr, s.n_warps, s.lines_per_instr) for s in specs}
+    if len(shapes) != 1:
+        raise ValueError(f"heterogeneous trace shapes in batch: {shapes}")
+    outs = [_sample_cells(s, seeds) for s in specs]
+    gap = np.broadcast_to(
+        np.asarray([s.compute_gap for s in specs],
+                   np.float32)[:, None], (len(specs), len(seeds))).copy()
+    return {
+        "lines": np.stack([o["lines"] for o in outs]),
+        "pcs": np.stack([o["pcs"] for o in outs]),
+        "compute_gap": gap,
+        "archetype": np.stack([o["archetype"] for o in outs]),
+        "archetype2": np.stack([o["archetype2"] for o in outs]),
+    }

@@ -1,0 +1,207 @@
+"""TraceSpec: archetype mixtures lowered to per-warp parameter arrays.
+
+The lowering contract (DESIGN.md §"Trace generation"):
+
+  spec  ──lower──►  (AddressLayout, WarpParams)  ──sample──►  lines/pcs
+
+* ``AddressLayout`` partitions the int32 line-address space into three
+  DISJOINT regions so the trace invariants are true by construction, at
+  any warp count: the shared pool sits in [0, 2^13), warp ``w``'s private
+  working set in [(w+1)<<13, (w+2)<<13), and the streaming (always-fresh)
+  region above every working set. At the paper's scale (48 warps, 64
+  instructions x 16 lanes) the layout constants reduce to the original
+  generator's (fresh base 2^22, per-warp fresh stride 2^15).
+
+* ``WarpParams`` holds, per seed and per warp: the archetype for each
+  kernel half (phase shifts flip archetypes at the midpoint, Fig 4), the
+  lowered per-half scalars (working-set size, reuse probability, shared
+  fraction), the working-set line table (a keyed 12-bit Feistel
+  permutation — distinct lines without replacement), the PC table and
+  the shared pool.
+
+Everything downstream of ``lower`` is a pure function of these arrays,
+which is what lets ``sampler.py`` materialize all cells at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.tracegen import rng
+
+# archetype = (working-set lines, reuse probability, shared-pool fraction)
+# — the five warp types of Fig 2, spanning all-hit .. all-miss.
+ARCHETYPES = {
+    "all_hit": (16, 0.998, 0.0),
+    "mostly_hit": (24, 0.96, 0.05),
+    "balanced": (64, 0.50, 0.10),
+    "mostly_miss": (128, 0.15, 0.10),
+    "all_miss": (0, 0.0, 0.0),
+}
+
+WS_REGION_BITS = 13                   # 8192-line private region per warp
+WS_CHOICE_BITS = 12                   # working set drawn from 4096 offsets
+_MIN_FRESH_BASE = 1 << 22
+_MIN_FRESH_STRIDE = 1 << 15
+_INT32_LIMIT = (1 << 31) - 1
+
+
+def _npow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Workload-agnostic trace description. ``mix`` gives the fraction of
+    warps drawn from each archetype (same order as ``archetypes``)."""
+    name: str
+    mix: Tuple[float, ...]
+    intensity: float                   # 1 = memory bound (tiny compute gap)
+    n_warps: int = 48
+    n_instr: int = 64
+    lines_per_instr: int = 16
+    n_pcs: int = 12
+    phase_shift: bool = False          # mid-kernel archetype change
+    phase_flip_prob: float = 0.25
+    shared_pool_lines: int = 256
+    shared_boost: float = 1.0          # multiplier on archetype shared fracs
+    archetypes: Optional[Tuple[Tuple[int, float, float], ...]] = None
+
+    @classmethod
+    def from_workload(cls, wl) -> "TraceSpec":
+        """Lift a legacy ``workloads.WorkloadSpec`` (duck-typed)."""
+        return cls(name=wl.name, mix=tuple(wl.mix), intensity=wl.intensity,
+                   n_warps=wl.n_warps, n_instr=wl.n_instr,
+                   lines_per_instr=wl.lines_per_instr, n_pcs=wl.n_pcs,
+                   phase_shift=wl.phase_shift)
+
+    def archetype_table(self) -> np.ndarray:
+        """f64[A, 3] rows of (ws_lines, reuse_p, shared_frac)."""
+        rows = self.archetypes or tuple(ARCHETYPES.values())
+        tab = np.asarray(rows, np.float64)
+        tab[:, 2] = np.clip(tab[:, 2] * self.shared_boost, 0.0, 1.0)
+        return tab
+
+    @property
+    def compute_gap(self) -> np.float32:
+        return np.float32(4.0 + (1.0 - self.intensity) * 120.0)
+
+
+def trace_key(spec_name: str, seed: int) -> int:
+    """Root key of one (workload, seed) trace — the same convention the
+    original generator used for its ``default_rng`` seed."""
+    return rng.mix64_scalar(
+        (int(seed) + (zlib.crc32(spec_name.encode()) << 32))
+        & ((1 << 64) - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class AddressLayout:
+    """Disjoint int32 address regions; all fields are line addresses."""
+    n_warps: int
+    pool_region: int                   # shared pool ⊂ [0, pool_region)
+    fresh_base: int                    # streaming region starts here
+    fresh_stride: int                  # per-warp streaming sub-region
+
+    def ws_base(self, w) -> np.ndarray:
+        return (np.asarray(w, np.int64) + 1) << WS_REGION_BITS
+
+    def fresh_addr(self, w, slot) -> np.ndarray:
+        """Streaming address of flat slot (ii*L + li) of warp w. Slots are
+        consumed positionally, so a cell's address never depends on how
+        many earlier draws chose the streaming branch."""
+        return (self.fresh_base
+                + np.asarray(w, np.int64) * self.fresh_stride
+                + np.asarray(slot, np.int64))
+
+
+def make_layout(spec: TraceSpec) -> AddressLayout:
+    # spec validation lives here because both the sampler and the loop
+    # reference lower through make_layout first
+    mix_sum = float(np.sum(np.asarray(spec.mix, np.float64)))
+    if abs(mix_sum - 1.0) > 1e-9:
+        raise ValueError(f"{spec.name}: mix sums to {mix_sum}, not 1")
+    tab = spec.archetype_table()
+    if tab[:, 0].max() > (1 << WS_CHOICE_BITS):
+        raise ValueError(
+            f"{spec.name}: working-set size {int(tab[:, 0].max())} exceeds "
+            f"the {1 << WS_CHOICE_BITS}-line per-warp choice domain "
+            f"(perm12 is only a bijection on [0, 4096))")
+    ws_top = (spec.n_warps + 1) << WS_REGION_BITS
+    fresh_base = max(_MIN_FRESH_BASE, _npow2(ws_top))
+    fresh_stride = max(_MIN_FRESH_STRIDE,
+                       _npow2(spec.n_instr * spec.lines_per_instr))
+    top = fresh_base + spec.n_warps * fresh_stride
+    if top > _INT32_LIMIT:
+        raise ValueError(
+            f"{spec.name}: address space overflows int32 "
+            f"(n_warps={spec.n_warps}, top={top}); shrink the scenario")
+    return AddressLayout(spec.n_warps, 1 << WS_REGION_BITS,
+                         fresh_base, fresh_stride)
+
+
+@dataclasses.dataclass(frozen=True)
+class WarpParams:
+    """Per-(seed, warp) lowered parameters. Leading axis S = len(seeds)."""
+    arch1: np.ndarray        # i64[S, W] archetype, first kernel half
+    arch2: np.ndarray        # i64[S, W] archetype, second half
+    ws_size: np.ndarray      # i64[S, W, 2] working-set lines per half
+    reuse: np.ndarray        # f64[S, W, 2] reuse probability per half
+    shared: np.ndarray       # f64[S, W, 2] shared fraction per half
+    ws_table: np.ndarray     # i64[S, W, max_ws] working-set line addrs
+    pc_table: np.ndarray     # i32[S, W, n_pcs]
+    pool: np.ndarray         # i64[S, P] shared-pool line addrs
+
+
+def lower(spec: TraceSpec, seeds) -> Tuple[AddressLayout, WarpParams]:
+    """Lower the archetype mixture to per-warp parameter arrays for every
+    seed in ``seeds`` at once (vectorized; the loop reference in ref.py
+    recomputes the same values scalar-wise)."""
+    seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+    layout = make_layout(spec)
+    tab = spec.archetype_table()
+    n_arch = tab.shape[0]
+    w_idx = np.arange(spec.n_warps, dtype=np.uint64)[None, :]     # [1, W]
+    roots = np.asarray([trace_key(spec.name, int(s)) for s in seeds],
+                       np.uint64)[:, None]                        # [S, 1]
+
+    # archetype mixture -> per-warp archetype via inverse CDF
+    cum = np.cumsum(np.asarray(spec.mix, np.float64))
+    u = rng.uniform(rng.stream_key(roots, rng.TAG_ARCH), w_idx)
+    arch1 = np.minimum(np.searchsorted(cum, u, side="right"),
+                       n_arch - 1).astype(np.int64)
+    if spec.phase_shift:
+        flip = rng.uniform(rng.stream_key(roots, rng.TAG_PHASE),
+                           w_idx) < spec.phase_flip_prob
+        pick = rng.randint(rng.stream_key(roots, rng.TAG_PHASE_PICK),
+                           w_idx, n_arch)
+        arch2 = np.where(flip, pick, arch1)
+    else:
+        arch2 = arch1
+
+    halves = np.stack([arch1, arch2], axis=-1)                    # [S, W, 2]
+    ws_size = tab[halves, 0].astype(np.int64)
+    reuse = tab[halves, 1]
+    shared = tab[halves, 2]
+
+    # working-set tables: keyed Feistel permutation => distinct lines
+    max_ws = max(int(tab[:, 0].max()), 1)
+    wkey = rng.bits(rng.stream_key(roots, rng.TAG_WS), w_idx)     # [S, W]
+    j = np.arange(max_ws, dtype=np.uint64)[None, None, :]
+    ws_table = layout.ws_base(np.arange(spec.n_warps))[None, :, None] \
+        + rng.perm12(j, wkey[:, :, None])
+
+    pc_flat = w_idx[:, :, None] * np.uint64(spec.n_pcs) \
+        + np.arange(spec.n_pcs, dtype=np.uint64)[None, None, :]
+    pc_table = rng.randint(rng.stream_key(roots[:, :, None], rng.TAG_PC),
+                           pc_flat, 1 << 16).astype(np.int32)
+
+    p_idx = np.arange(spec.shared_pool_lines, dtype=np.uint64)[None, :]
+    pool = rng.randint(rng.stream_key(roots, rng.TAG_POOL), p_idx,
+                       layout.pool_region)
+
+    return layout, WarpParams(arch1, arch2, ws_size, reuse, shared,
+                              ws_table, pc_table, pool)

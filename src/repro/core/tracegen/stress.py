@@ -1,0 +1,43 @@
+"""Scheduler-stress scenario matrix — warp populations far beyond the
+paper's 48, in the spirit of the larger sweeps of WaSP (arXiv:2404.06156)
+and Dynamic Warp Resizing (arXiv:1208.2374).
+
+Three stressor families, each isolating one pressure source:
+
+  * HAMMER — queue-hammering: memory-bound intensity with a
+    mostly-miss/all-miss-dominated mix, so nearly every instruction
+    floods the L2 bank queues and the DRAM low-priority queue (Fig 5's
+    tail, at 40-80x the request rate);
+  * PHASE — phase-shift-heavy: most warps flip archetype mid-kernel,
+    stressing the warp-type classifier's re-learning path (Fig 4's
+    long-term-shift caveat made the common case);
+  * FRONTIER — shared-pool-dominated graph frontiers: reuse is mostly
+    inter-warp (boosted shared fractions, larger pool), so per-warp
+    insertion/bypass decisions interact across the whole population.
+
+All specs keep the paper's 64x16 instruction geometry so a trace at
+n_warps=4096 stays ~16 MB and the full matrix generates in seconds on
+the vectorized sampler (benchmarks/run.py --only tracegen).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.core.tracegen.spec import TraceSpec
+
+_HAMMER_MIX: Tuple[float, ...] = (0.02, 0.08, 0.10, 0.45, 0.35)
+_PHASE_MIX: Tuple[float, ...] = (0.10, 0.25, 0.30, 0.25, 0.10)
+_FRONTIER_MIX: Tuple[float, ...] = (0.05, 0.25, 0.30, 0.25, 0.15)
+
+STRESS_SPECS: Dict[str, TraceSpec] = {s.name: s for s in [
+    TraceSpec("WIDE1K", mix=(0.05, 0.25, 0.10, 0.35, 0.25), intensity=0.95,
+              n_warps=1024),
+    TraceSpec("HAMMER2K", mix=_HAMMER_MIX, intensity=1.0, n_warps=2048),
+    TraceSpec("HAMMER4K", mix=_HAMMER_MIX, intensity=0.98, n_warps=4096),
+    TraceSpec("PHASE2K", mix=_PHASE_MIX, intensity=0.80, n_warps=2048,
+              phase_shift=True, phase_flip_prob=0.75),
+    TraceSpec("FRONTIER2K", mix=_FRONTIER_MIX, intensity=0.95, n_warps=2048,
+              shared_boost=6.0, shared_pool_lines=512),
+]}
+
+STRESS_NAMES = tuple(STRESS_SPECS)

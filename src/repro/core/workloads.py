@@ -17,23 +17,21 @@ paper reports for that app class:
 Crucially the generator fixes only the ADDRESS STREAM — whether a request
 hits is decided by the simulated cache under the policy being evaluated,
 so policies can (and do) change warp hit ratios.
+
+Generation itself lives in ``repro.core.tracegen``: a counter-RNG,
+fully vectorized sampler (with a loop reference under exact-parity
+tests) that also powers ``generate_batch`` multi-seed / multi-workload
+stacks and the thousands-of-warps stress matrix. This module keeps the
+paper's 15 ``WorkloadSpec`` entries and the original ``generate``
+contract.
 """
 from __future__ import annotations
 
 import dataclasses
-import zlib
 from typing import Dict, Tuple
 
-import numpy as np
-
-# archetype = (working-set lines, reuse probability, shared-pool fraction)
-ARCHETYPES = {
-    "all_hit": (16, 0.998, 0.0),
-    "mostly_hit": (24, 0.96, 0.05),
-    "balanced": (64, 0.50, 0.10),
-    "mostly_miss": (128, 0.15, 0.10),
-    "all_miss": (0, 0.0, 0.0),
-}
+from repro.core import tracegen
+from repro.core.tracegen import ARCHETYPES  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,52 +81,12 @@ def generate(spec: WorkloadSpec, seed: int = 0):
       compute_gap: f32      cycles between a warp's instructions
       archetype: i32[W]     ground-truth archetype per warp (for Fig 2/4)
     """
-    rng = np.random.default_rng(seed + zlib.crc32(spec.name.encode()))
-    w, i, lpi = spec.n_warps, spec.n_instr, spec.lines_per_instr
-    names = list(ARCHETYPES)
-    arch_idx = rng.choice(len(names), size=w, p=np.asarray(spec.mix))
-    # shared pool for inter-warp reuse (graph frontiers etc.)
-    shared_pool = rng.integers(0, 1 << 20, size=256).astype(np.int64)
+    return tracegen.generate(tracegen.TraceSpec.from_workload(spec), seed)
 
-    lines = np.full((i, w, lpi), -1, np.int32)
-    pcs = np.zeros((i, w), np.int32)
 
-    for wi in range(w):
-        at = names[arch_idx[wi]]
-        ws_size, reuse, shared_frac = ARCHETYPES[at]
-        if spec.phase_shift and rng.random() < 0.25:
-            # this warp flips archetype half-way (Fig 4 long-term shift)
-            at2 = names[rng.choice(len(names))]
-        else:
-            at2 = at
-        # private working set: contiguous-ish region with stride spreading
-        # across cache sets
-        base = np.int32(wi) << 13
-        ws = base + rng.choice(1 << 12, size=max(ws_size, 1), replace=False)
-        pcs_w = rng.integers(0, 1 << 16, size=spec.n_pcs)
-        # streaming region: disjoint per warp, int32-safe
-        fresh_ctr = (1 << 22) + wi * (1 << 15)
-        for ii in range(i):
-            a_t = at if ii < i // 2 else at2
-            ws_size_t, reuse_t, shared_t = ARCHETYPES[a_t]
-            pcs[ii, wi] = pcs_w[ii % spec.n_pcs]
-            for li in range(lpi):
-                u = rng.random()
-                if ws_size_t and u < reuse_t:
-                    if shared_t and rng.random() < shared_t:
-                        lines[ii, wi, li] = shared_pool[
-                            rng.integers(0, len(shared_pool))]
-                    else:
-                        lines[ii, wi, li] = ws[rng.integers(0, len(ws))]
-                else:
-                    lines[ii, wi, li] = fresh_ctr
-                    fresh_ctr += 1
-    # warps of the same instruction touch nearby lines sometimes -> bank
-    # conflicts emerge through the hash in the simulator
-    compute_gap = np.float32(4.0 + (1.0 - spec.intensity) * 120.0)
-    return {
-        "lines": lines.astype(np.int32),
-        "pcs": pcs,
-        "compute_gap": compute_gap,
-        "archetype": arch_idx.astype(np.int32),
-    }
+def generate_suite(workloads=WORKLOAD_NAMES, seeds=(0,)):
+    """Stacked traces for several workloads × seeds (same shape required)
+    — see ``tracegen.generate_batch`` for the output layout."""
+    specs = [tracegen.TraceSpec.from_workload(WORKLOADS[w])
+             for w in workloads]
+    return tracegen.generate_batch(specs, seeds)

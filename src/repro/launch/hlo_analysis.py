@@ -61,6 +61,38 @@ class Instr:
     line: str
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an operand list on top-level commas only — shapes like
+    ``f32[4,32]{1,0}`` and tuple types contain commas of their own."""
+    parts: List[str] = []
+    depth, cur = 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _operand_type(operand: str, types: Dict[str, str]) -> str:
+    """Type string of one operand. Newer XLA prints bare names
+    (``%get-tuple-element.4``); older XLA (jax<=0.4.x) prints the type
+    inline (``f32[4,32]{1,0} %get-tuple-element.4``) — prefer the inline
+    type, fall back to the name lookup."""
+    operand = operand.strip()
+    parts = operand.rsplit(None, 1)
+    if len(parts) == 2 and _SHAPE_RE.search(parts[0]):
+        return parts[0]
+    return types.get(operand.lstrip("%"), "")
+
+
 @dataclasses.dataclass
 class Computation:
     name: str
@@ -136,13 +168,12 @@ def _analyze_computation(comp: Computation, param_types: Dict[str, str]):
         if op == "dot":
             # flops = 2 * prod(output dims) * prod(contracting dims of lhs)
             mm = re.search(r"dot\(([^)]*)\)", ins.line)
-            operands = [o.strip().lstrip("%") for o in
-                        (mm.group(1).split(",") if mm else [])]
+            operands = _split_operands(mm.group(1)) if mm else []
             cdims = dict(_DIMS_ATTR.findall(ins.line))
             lhs_c = cdims.get("lhs_contracting_dims", "")
             contracted = 1
             if operands and lhs_c:
-                lhs_t = types.get(operands[0], "")
+                lhs_t = _operand_type(operands[0], types)
                 sm = _SHAPE_RE.search(lhs_t)
                 if sm and sm.group(2):
                     dims = [int(d) for d in sm.group(2).split(",") if d]
@@ -174,9 +205,9 @@ def _analyze_computation(comp: Computation, param_types: Dict[str, str]):
                 mm = re.search(rf"{kind}[\w\-]*\((.*?)\)", ins.line)
                 in_b = 0
                 if mm:
-                    for o in mm.group(1).split(","):
-                        o = o.strip().lstrip("%")
-                        tb, _ = _shape_bytes_and_elems(types.get(o, ""))
+                    for o in _split_operands(mm.group(1)):
+                        tb, _ = _shape_bytes_and_elems(
+                            _operand_type(o, types))
                         in_b += tb
                 vol = float(max(out_b, in_b))
                 comp.coll_bytes[kind] = comp.coll_bytes.get(kind, 0.0) + vol

@@ -1,0 +1,166 @@
+"""Differential tests: vectorized sampler vs loop reference, bit-exact.
+
+The tracegen contract (ISSUE 2): for every workload in ``WL.WORKLOADS``
+and every seed, ``sampler.generate`` and ``ref.generate_ref`` produce
+IDENTICAL arrays — not statistically close, equal. The counter RNG makes
+this well-defined; these tests enforce it, plus the scalar/array RNG
+mirror equality it rests on, plus the batch-stacking and sweep-feeding
+contracts.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import tracegen as TG
+from repro.core import workloads as WL
+from repro.core.simulator import SimParams, simulate_sweep
+from repro.core.tracegen import rng
+
+DIFF_SEEDS = (0, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# scalar RNG mirror == array RNG (the dual implementation under the diff)
+# ---------------------------------------------------------------------------
+
+def test_rng_scalar_matches_array():
+    probe = np.random.default_rng(7).integers(
+        0, 1 << 63, size=256).astype(np.uint64)
+    idx = np.arange(256, dtype=np.uint64)
+    assert np.array_equal(rng.mix64(probe),
+                          [rng.mix64_scalar(int(x)) for x in probe])
+    key = rng.stream_key(np.uint64(12345), rng.TAG_REUSE_U)
+    assert int(key) == rng.stream_key_scalar(12345, rng.TAG_REUSE_U)
+    assert np.array_equal(rng.bits(key, idx),
+                          [rng.bits_scalar(int(key), i) for i in range(256)])
+    assert np.array_equal(rng.uniform(key, idx),
+                          [rng.uniform_scalar(int(key), i)
+                           for i in range(256)])
+    assert np.array_equal(rng.randint(key, idx, 97),
+                          [rng.randint_scalar(int(key), i, 97)
+                           for i in range(256)])
+
+
+def test_perm12_is_a_permutation_and_matches_scalar():
+    j = np.arange(4096, dtype=np.uint64)
+    for key in (np.uint64(1), np.uint64(0xDEADBEEFCAFE)):
+        p = rng.perm12(j, key)
+        assert sorted(p.tolist()) == list(range(4096))
+        sample = [0, 1, 63, 64, 4095]
+        assert [rng.perm12_scalar(s, int(key)) for s in sample] == \
+            [int(p[s]) for s in sample]
+
+
+# ---------------------------------------------------------------------------
+# the differential: every workload x 3 seeds, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", WL.WORKLOAD_NAMES)
+def test_vectorized_matches_loop_ref(workload):
+    spec = TG.TraceSpec.from_workload(WL.WORKLOADS[workload])
+    for seed in DIFF_SEEDS:
+        vec = TG.generate(spec, seed)
+        ref = TG.generate_ref(spec, seed)
+        for key in ("lines", "pcs", "archetype", "archetype2"):
+            assert np.array_equal(vec[key], ref[key]), (workload, seed, key)
+        assert vec["compute_gap"] == ref["compute_gap"]
+        assert vec["lines"].dtype == np.int32
+        assert vec["pcs"].dtype == np.int32
+
+
+def test_workloads_generate_is_the_vectorized_path():
+    spec = WL.WORKLOADS["MST"]
+    a = WL.generate(spec, seed=5)
+    b = TG.generate(TG.TraceSpec.from_workload(spec), seed=5)
+    for key in ("lines", "pcs", "archetype"):
+        assert np.array_equal(a[key], b[key])
+
+
+def test_stress_spec_matches_loop_ref_small():
+    """The loop ref also agrees on non-default spec knobs (boosted shared
+    fractions, aggressive phase shifts) — shrunk to keep the loop fast."""
+    for name, spec in TG.STRESS_SPECS.items():
+        small = dataclasses.replace(spec, n_warps=32, n_instr=16)
+        vec = TG.generate(small, 1)
+        ref = TG.generate_ref(small, 1)
+        for key in ("lines", "pcs", "archetype", "archetype2"):
+            assert np.array_equal(vec[key], ref[key]), (name, key)
+
+
+# ---------------------------------------------------------------------------
+# batch stacking + feeding simulate_sweep
+# ---------------------------------------------------------------------------
+
+def test_generate_batch_matches_singles():
+    specs = [TG.TraceSpec.from_workload(WL.WORKLOADS[w])
+             for w in ("BFS", "BP")]
+    seeds = (0, 3)
+    batch = TG.generate_batch(specs, seeds)
+    assert batch["lines"].shape[:2] == (2, 2)
+    assert batch["compute_gap"].shape == (2, 2)
+    for ni, spec in enumerate(specs):
+        for si, seed in enumerate(seeds):
+            one = TG.generate(spec, seed)
+            for key in ("lines", "pcs", "archetype"):
+                assert np.array_equal(batch[key][ni, si], one[key]), \
+                    (spec.name, seed, key)
+            assert batch["compute_gap"][ni, si] == one["compute_gap"]
+
+
+def test_workloads_generate_suite_wraps_batch():
+    suite = WL.generate_suite(("BFS", "BP"), seeds=(0, 1))
+    specs = [TG.TraceSpec.from_workload(WL.WORKLOADS[w])
+             for w in ("BFS", "BP")]
+    batch = TG.generate_batch(specs, (0, 1))
+    for key in ("lines", "pcs", "archetype", "compute_gap"):
+        assert np.array_equal(suite[key], batch[key])
+
+
+def test_spec_validation_guards():
+    base = TG.TraceSpec.from_workload(WL.WORKLOADS["BFS"])
+    # mix must sum to 1 (the legacy default_rng.choice(p=...) check)
+    bad_mix = dataclasses.replace(base, mix=(0.5, 0.2, 0.1, 0.1, 0.05))
+    with pytest.raises(ValueError, match="mix sums"):
+        TG.generate(bad_mix, 0)
+    # working sets larger than perm12's bijection domain must not
+    # silently produce duplicate lines
+    big_ws = dataclasses.replace(
+        base, archetypes=((8192, 0.9, 0.0),) * 5)
+    with pytest.raises(ValueError, match="choice domain"):
+        TG.generate(big_ws, 0)
+
+
+def test_generate_batch_rejects_mixed_shapes():
+    a = TG.TraceSpec.from_workload(WL.WORKLOADS["BFS"])
+    b = dataclasses.replace(a, name="wide", n_warps=64)
+    with pytest.raises(ValueError, match="heterogeneous"):
+        TG.generate_batch([a, b], seeds=(0,))
+
+
+def test_batch_feeds_simulate_sweep_as_one_call():
+    """workloads x seeds collapse onto simulate_sweep's seed axis: one
+    jitted call sweeps policies x seeds x workloads, and each column
+    equals the corresponding single-trace sweep."""
+    prm = SimParams()
+    names = ("BFS", "BP")
+    specs = [TG.TraceSpec.from_workload(WL.WORKLOADS[w]) for w in names]
+    seeds = (0, 1)
+    batch = TG.generate_batch(specs, seeds)
+    n, s, i, w, l = batch["lines"].shape
+    pols = (BL.BASELINE, BL.MEDIC)
+    out = simulate_sweep(
+        jnp.asarray(batch["lines"].reshape(n * s, i, w, l)),
+        jnp.asarray(batch["pcs"].reshape(n * s, i, w)),
+        jnp.asarray(batch["compute_gap"].reshape(n * s)),
+        pols, n_warps=w, lanes=l, prm=prm)
+    assert out["ipc"].shape == (len(pols), n * s)
+    # column (workload 1, seed 0) == unstacked sweep of that trace
+    tr = TG.generate(specs[1], seeds[0])
+    flat = simulate_sweep(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+                          jnp.asarray(tr["compute_gap"]), pols,
+                          n_warps=w, lanes=l, prm=prm)
+    assert np.array_equal(np.asarray(out["ipc"][:, 1 * s + 0]),
+                          np.asarray(flat["ipc"]))

@@ -1,0 +1,157 @@
+"""Property tests for trace invariants (ISSUE 2 satellite).
+
+The invariants the simulator's warp-type story rests on:
+
+  I1  mix fractions respected — archetype counts match the spec mixture
+      within binomial tolerance;
+  I2  private working sets disjoint across warps — warp w only ever
+      reuses lines from its own [(w+1)<<13, (w+2)<<13) region;
+  I3  streaming addresses never collide with working sets (or the
+      shared pool, or another warp's stream);
+  I4  archetype stability — without phase shifts a warp's line universe
+      is identical in both kernel halves (Fig 4's premise).
+
+A deterministic grid (all 15 workloads + the stress matrix) always runs;
+when hypothesis is installed the same checker fuzzes the TraceSpec space
+(the CI tier-2 job installs it; the pinned runtime image may not).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import tracegen as TG
+from repro.core import workloads as WL
+from repro.core.tracegen.spec import make_layout
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def check_invariants(spec: TG.TraceSpec, seed: int) -> None:
+    layout = make_layout(spec)
+    tr = TG.generate(spec, seed)
+    lines, arch = tr["lines"], tr["archetype"]
+    w_n = spec.n_warps
+    assert lines.max() < 2 ** 31 and lines.min() >= 0
+
+    # I1 — mixture respected (binomial 5-sigma + discreteness slack)
+    counts = np.bincount(arch, minlength=len(spec.mix))
+    for a, p in enumerate(spec.mix):
+        sigma = np.sqrt(max(p * (1 - p), 1e-9) / w_n)
+        assert abs(counts[a] / w_n - p) <= 5 * sigma + 2 / w_n, \
+            (spec.name, a, counts[a] / w_n, p)
+
+    # I2 — working-set lines stay in their own warp's private region
+    wi = np.arange(w_n, dtype=np.int64)[None, :, None]
+    ws_mask = (lines >= layout.pool_region) & (lines < layout.fresh_base)
+    owner = (lines.astype(np.int64) >> 13) - 1
+    assert bool(np.all(owner[ws_mask] == np.broadcast_to(
+        wi, lines.shape)[ws_mask])), spec.name
+
+    # I3 — streaming region disjoint from every working set and the pool,
+    # and each warp streams only inside its own stripe
+    fresh_mask = lines >= layout.fresh_base
+    offs = lines.astype(np.int64) - layout.fresh_base
+    stripe = offs // layout.fresh_stride
+    assert bool(np.all(stripe[fresh_mask] == np.broadcast_to(
+        wi, lines.shape)[fresh_mask])), spec.name
+    # all_miss warps (empty working set) must be pure streaming
+    tab = spec.archetype_table()
+    dead = np.flatnonzero((tab[arch, 0] == 0)
+                          & (tab[tr["archetype2"], 0] == 0))
+    if dead.size:
+        assert bool(np.all(fresh_mask[:, dead, :])), spec.name
+
+    # I4 — stability: without phase shifts, every reuse (non-streaming)
+    # line in EITHER half comes from the warp's single lowered working
+    # set (or the shared pool) — the same universe all kernel long
+    if not spec.phase_shift:
+        assert np.array_equal(arch, tr["archetype2"])
+        _, wp = TG.lower(spec, [seed])
+        half = spec.n_instr // 2
+        pool_set = set(wp.pool[0].tolist())
+        for w in range(0, w_n, max(w_n // 8, 1)):
+            size = int(wp.ws_size[0, w, 0])
+            allowed = set(wp.ws_table[0, w, :size].tolist()) | pool_set
+            for sl in (slice(0, half), slice(half, None)):
+                used = lines[sl, w][~fresh_mask[sl, w]]
+                assert set(used.ravel().tolist()) <= allowed, (spec.name, w)
+
+
+@pytest.mark.parametrize("workload", WL.WORKLOAD_NAMES)
+def test_invariants_paper_workloads(workload):
+    spec = TG.TraceSpec.from_workload(WL.WORKLOADS[workload])
+    check_invariants(spec, seed=0)
+
+
+@pytest.mark.parametrize("name", TG.STRESS_SPECS)
+def test_invariants_stress_matrix(name):
+    check_invariants(TG.STRESS_SPECS[name], seed=1)
+
+
+def test_mix_fraction_converges_at_scale():
+    """I1 sharpens with warp count: at 4096 warps every archetype
+    fraction lands within 3 points of the spec mixture."""
+    spec = dataclasses.replace(
+        TG.TraceSpec.from_workload(WL.WORKLOADS["BFS"]), n_warps=4096)
+    arch = TG.generate(spec, 0)["archetype"]
+    frac = np.bincount(arch, minlength=5) / spec.n_warps
+    np.testing.assert_allclose(frac, spec.mix, atol=0.03)
+
+
+def test_phase_shift_flip_rate():
+    spec = TG.STRESS_SPECS["PHASE2K"]
+    tr = TG.generate(spec, 0)
+    flipped = float(np.mean(tr["archetype"] != tr["archetype2"]))
+    # flip_prob, minus picks that landed on the same archetype (~1/5)
+    expected = spec.phase_flip_prob * (1 - 1 / len(spec.mix))
+    assert abs(flipped - expected) < 0.05, (flipped, expected)
+
+
+def test_non_phase_shift_never_flips():
+    for w in ("BFS", "CONS"):
+        spec = TG.TraceSpec.from_workload(WL.WORKLOADS[w])
+        tr = TG.generate(spec, 2)
+        assert np.array_equal(tr["archetype"], tr["archetype2"])
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def trace_specs(draw):
+        n_arch = 5
+        weights = [draw(st.integers(0, 10)) for _ in range(n_arch)]
+        if sum(weights) == 0:
+            weights[draw(st.integers(0, n_arch - 1))] = 1
+        total = sum(weights)
+        mix = tuple(x / total for x in weights)
+        return TG.TraceSpec(
+            name=draw(st.sampled_from(["fuzzA", "fuzzB", "fuzzC"])),
+            mix=mix,
+            intensity=draw(st.floats(0.0, 1.0)),
+            n_warps=draw(st.integers(1, 192)),
+            n_instr=2 * draw(st.integers(1, 16)),
+            lines_per_instr=draw(st.integers(1, 8)),
+            n_pcs=draw(st.integers(1, 12)),
+            phase_shift=draw(st.booleans()),
+            phase_flip_prob=draw(st.floats(0.0, 1.0)),
+            shared_boost=draw(st.floats(0.0, 8.0)),
+        )
+
+    @settings(max_examples=40, deadline=None)
+    @given(spec=trace_specs(), seed=st.integers(0, 2 ** 31 - 1))
+    def test_invariants_fuzzed(spec, seed):
+        check_invariants(spec, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(spec=trace_specs(), seed=st.integers(0, 2 ** 31 - 1))
+    def test_loop_parity_fuzzed(spec, seed):
+        small = dataclasses.replace(spec, n_warps=min(spec.n_warps, 24),
+                                    n_instr=min(spec.n_instr, 8))
+        vec = TG.generate(small, seed)
+        ref = TG.generate_ref(small, seed)
+        for key in ("lines", "pcs", "archetype", "archetype2"):
+            assert np.array_equal(vec[key], ref[key]), key

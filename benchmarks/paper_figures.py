@@ -30,16 +30,18 @@ SWEEP_POLICIES: Tuple[Policy, ...] = tuple(BL.ALL_NAMED) + (
 # `simulate_sweep` call per workload covers policies x seeds.
 FIG_SEEDS: Tuple[int, ...] = (0,)
 
-_CACHE: Dict[Tuple[str, Tuple[int, ...]], Dict[int, Dict[str, dict]]] = {}
+_CACHE: Dict[Tuple[str, Tuple[int, ...], str],
+             Dict[int, Dict[str, dict]]] = {}
 
 
 def _sweep(workload: str, seed: int = 0,
-           seeds: Tuple[int, ...] = None) -> Dict[str, dict]:
+           seeds: Tuple[int, ...] = None,
+           engine: str = "event") -> Dict[str, dict]:
     """All SWEEP_POLICIES on one workload, batched over policies and the
     seed block containing ``seed``. Returns name->metrics for ``seed``."""
     if seeds is None or seed not in seeds:
         seeds = FIG_SEEDS if seed in FIG_SEEDS else (seed,)
-    key = (workload, seeds)
+    key = (workload, seeds, engine)
     if key not in _CACHE:
         spec = TG.TraceSpec.from_workload(WL.WORKLOADS[workload])
         tr = TG.generate_batch([spec], seeds)
@@ -47,7 +49,8 @@ def _sweep(workload: str, seed: int = 0,
         out = simulate_sweep(
             jnp.asarray(tr["lines"][0]), jnp.asarray(tr["pcs"][0]),
             jnp.asarray(tr["compute_gap"][0]), SWEEP_POLICIES,
-            n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM)
+            n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM,
+            engine=engine)
         out = {k: np.asarray(v) for k, v in out.items()}   # [P, S, ...]
         wall = time.perf_counter() - t0
         by_seed: Dict[int, Dict[str, dict]] = {}
@@ -69,23 +72,24 @@ def _sweep(workload: str, seed: int = 0,
 
 
 _BY_NAME: Dict[str, Policy] = {p.name: p for p in SWEEP_POLICIES}
-_OFF_SWEEP_CACHE: Dict[Tuple[str, Policy, int], dict] = {}
+_OFF_SWEEP_CACHE: Dict[Tuple[str, Policy, int, str], dict] = {}
 
 
 def _run(workload: str, pol: Policy, seed: int = 0,
-         seeds: Tuple[int, ...] = None) -> dict:
+         seeds: Tuple[int, ...] = None, engine: str = "event") -> dict:
     if _BY_NAME.get(pol.name) == pol:
-        return _sweep(workload, seed, seeds)[pol.name]
+        return _sweep(workload, seed, seeds, engine)[pol.name]
     # off-sweep policy (e.g. BL.RAND_SWEEP points): one-off run — still no
     # retrace, since the policy enters `simulate` as a traced pytree
-    key = (workload, pol, seed)
+    key = (workload, pol, seed, engine)
     if key not in _OFF_SWEEP_CACHE:
         spec = WL.WORKLOADS[workload]
         tr = WL.generate(spec, seed=seed)
         t0 = time.perf_counter()
         out = simulate(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
                        jnp.asarray(tr["compute_gap"]), n_warps=spec.n_warps,
-                       lanes=spec.lines_per_instr, prm=PRM, pol=pol)
+                       lanes=spec.lines_per_instr, prm=PRM, pol=pol,
+                       engine=engine)
         out = {k: np.asarray(v) for k, v in out.items()}
         out["sweep_wall_s"] = time.perf_counter() - t0   # sweep of one
         out["trace"] = tr
@@ -148,10 +152,14 @@ def fig5_queueing(workload="BFS"):
 # Fig 7 — performance of MeDiC vs all baselines over 15 workloads
 # ---------------------------------------------------------------------------
 
-def fig7_performance(workloads=WL.WORKLOAD_NAMES, seeds=(0,)):
+def fig7_performance(workloads=WL.WORKLOAD_NAMES, seeds=(0,),
+                     engine="event"):
     """Speedup table. With several ``seeds`` the per-workload speedup is
     the mean over seeds, and every seed of a workload comes out of the
-    same seed-stacked `simulate_sweep` call (tracegen.generate_batch)."""
+    same seed-stacked `simulate_sweep` call (tracegen.generate_batch).
+    ``engine`` selects the simulation engine (the golden suite pins the
+    default event path byte-identically; ``"wavefront"`` reproduces the
+    orderings within the documented tolerance, DESIGN.md §9)."""
     seeds = tuple(seeds)
     policies = list(BL.ALL_NAMED)
     rows = []
@@ -161,14 +169,14 @@ def fig7_performance(workloads=WL.WORKLOAD_NAMES, seeds=(0,)):
         per_pol: Dict[str, List[float]] = {p.name: [] for p in policies}
         ideal: List[float] = []
         for sd in seeds:
-            base = float(_run(wl, BL.BASELINE, sd, seeds)["ipc"])
+            base = float(_run(wl, BL.BASELINE, sd, seeds, engine)["ipc"])
             for pol in policies:
                 per_pol[pol.name].append(
-                    float(_run(wl, pol, sd, seeds)["ipc"]) / base)
+                    float(_run(wl, pol, sd, seeds, engine)["ipc"]) / base)
             # idealized Rand: best bypass probability per workload
             # (paper fn.3)
             ideal.append(max(
-                float(_run(wl, BL.rand(p), sd, seeds)["ipc"]) / base
+                float(_run(wl, BL.rand(p), sd, seeds, engine)["ipc"]) / base
                 for p in (0.25, 0.5, 0.75)))
         for pol in policies:
             s = float(np.mean(per_pol[pol.name]))

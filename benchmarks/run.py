@@ -57,8 +57,8 @@ def main() -> None:
         if probe_created:
             os.remove(args.json)
 
-    from benchmarks import (kernel_micro, paper_figures, serving_ab,
-                            tracegen_bench)
+    from benchmarks import (engine_bench, kernel_micro, paper_figures,
+                            serving_ab, tracegen_bench)
     from repro.core import workloads as WL
 
     wls = ("BFS", "SSSP", "BP", "CONS") if args.quick else WL.WORKLOAD_NAMES
@@ -71,6 +71,7 @@ def main() -> None:
         "fig8_energy": lambda: paper_figures.fig8_energy(wls),
         "tracegen_scale": lambda: tracegen_bench.tracegen_scale(
             loop_sample=1 if args.quick else 3),
+        "engine_scale": lambda: engine_bench.engine_scale(quick=args.quick),
         "serving_ab": serving_ab.serving_ab,
         "kernel_micro": kernel_micro.kernel_micro,
     }

@@ -1,0 +1,120 @@
+"""Wavefront simulation engine subsystem (ISSUE 3 tentpole).
+
+Two interchangeable engines behind one API (DESIGN.md §9):
+
+  * ``engine/event.py``     — the exact discrete-event reference loop
+    (one earliest-ready warp per scan step; O(I·W·L) sequential);
+  * ``engine/wavefront.py`` — the batched round-lockstep event loop
+    (a wave of the ``wave_size`` earliest-ready warps per scan step,
+    queue semantics recovered with sort-by-arrival + segmented prefix
+    ops; runs the 1k–4k-warp stress matrix end-to-end);
+  * ``engine/state.py``     — SimParams / SimState / init shared by both;
+  * ``engine/request.py``   — per-request math shared by both.
+
+``simulate`` / ``simulate_sweep`` keep their historical signatures and
+grow an ``engine=`` argument; the default (``"event"``) is byte-identical
+to the pre-split simulator, which the golden fig7 suite pins.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+
+from repro.core.engine import event as _event
+from repro.core.engine import wavefront as _wavefront
+from repro.core.engine.state import (N_QBINS, SimParams, SimState,
+                                     init_state)
+from repro.policy import Policy, stack_policies, to_arrays
+
+ENGINES = ("event", "wavefront")
+
+
+def _core(engine: str, wave_size: Optional[int]):
+    if engine == "event":
+        return _event.simulate_core
+    if engine == "wavefront":
+        return partial(_wavefront.simulate_core, wave_size=wave_size)
+    raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+
+
+@partial(jax.jit,
+         static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size"))
+def _simulate_one(trace_lines, trace_pcs, compute_gap, pa, *, n_warps: int,
+                  lanes: int, prm: SimParams, engine: str = "event",
+                  wave_size: Optional[int] = None) -> Dict[str, Any]:
+    core = _core(engine, wave_size)
+    return core(trace_lines, trace_pcs, compute_gap, pa,
+                n_warps=n_warps, lanes=lanes, prm=prm)
+
+
+@partial(jax.jit,
+         static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size"))
+def _simulate_batch(trace_lines, trace_pcs, compute_gap, pa_batch, *,
+                    n_warps: int, lanes: int, prm: SimParams,
+                    engine: str = "event",
+                    wave_size: Optional[int] = None):
+    one = partial(_core(engine, wave_size), n_warps=n_warps, lanes=lanes,
+                  prm=prm)
+    if trace_lines.ndim == 4:      # seed-stacked traces [S, I, W, L]
+        over_seeds = jax.vmap(one, in_axes=(0, 0, 0, None))
+        return jax.vmap(over_seeds, in_axes=(None, None, None, 0))(
+            trace_lines, trace_pcs, compute_gap, pa_batch)
+    return jax.vmap(one, in_axes=(None, None, None, 0))(
+        trace_lines, trace_pcs, compute_gap, pa_batch)
+
+
+def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
+             lanes: int, prm: SimParams, pol: Policy,
+             engine: str = "event",
+             wave_size: Optional[int] = None) -> Dict[str, Any]:
+    """Run one workload under one policy.
+
+    ``engine="event"`` (default) is the exact discrete-event reference:
+    each outer step pops the globally earliest ready warp, so queue
+    counters are updated chronologically (up to intra-instruction lane
+    skew). ``engine="wavefront"`` batches ``wave_size`` earliest-ready
+    warps per step (default ``max(min(W, 8), W//6)``, widening to
+    ``W//4`` above 256 warps — see ``wavefront.default_wave_size``) —
+    within the documented tolerance of the event path (DESIGN.md §9)
+    and the only path that completes the tracegen stress matrix.
+
+    The policy enters as a traced `PolicyArrays`, so every `Policy` preset
+    reuses the same compiled executable for a given workload shape.
+
+    trace_lines: i32[I, W, L]; trace_pcs: i32[I, W].
+    Returns metrics dict (all jnp arrays).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    return _simulate_one(trace_lines, trace_pcs, compute_gap,
+                         to_arrays(pol), n_warps=n_warps, lanes=lanes,
+                         prm=prm, engine=engine, wave_size=wave_size)
+
+
+def simulate_sweep(trace_lines, trace_pcs, compute_gap,
+                   policies: Sequence[Policy], *, n_warps: int, lanes: int,
+                   prm: SimParams, engine: str = "event",
+                   wave_size: Optional[int] = None) -> Dict[str, Any]:
+    """Run a whole policy sweep in ONE jitted, vmapped call.
+
+    trace_lines may be [I, W, L] (one workload instance — outputs get a
+    leading policy axis P) or seed-stacked [S, I, W, L] (outputs get
+    leading axes [P, S]); trace_pcs/compute_gap follow suit.
+
+    Metrics match per-policy `simulate` calls bit-for-bit on either
+    engine (the parity is enforced by tests/test_policy_engine.py).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    pa = stack_policies(policies)
+    return _simulate_batch(trace_lines, trace_pcs, compute_gap, pa,
+                           n_warps=n_warps, lanes=lanes, prm=prm,
+                           engine=engine, wave_size=wave_size)
+
+
+__all__ = [
+    "ENGINES", "N_QBINS", "SimParams", "SimState", "init_state",
+    "simulate", "simulate_sweep",
+]

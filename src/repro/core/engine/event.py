@@ -1,0 +1,192 @@
+"""Exact discrete-event reference engine (``engine="event"``).
+
+True discrete-event order: each outer step pops the globally earliest
+ready warp and services its next memory instruction's requests one at a
+time, so every queue counter is updated chronologically (up to
+intra-instruction lane skew). This is the fidelity reference the
+wavefront engine is differentially tested against — and the reason it is
+O(I·W) *sequential* scan steps with an inner per-lane scan, which is
+what caps it far below the stress-matrix warp counts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import classifier as CLF
+from repro.core.engine import request as REQ
+from repro.core.engine.state import SimParams, SimState, init_state
+from repro.policy import PolicyArrays, ops as POL
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _request_step(st: SimState, req, prm: SimParams, pa: PolicyArrays,
+                  tokens) -> tuple:
+    """Service ONE request against the full state, chronologically exact."""
+    t_arr, w, addr, pc, valid = req
+    m = st.metrics
+
+    # ---- ② bypass decision (branchless, repro.policy) ----------------------
+    byp, wtype, pidx = REQ.bypass_decision(st, w, addr, pc, valid, prm, pa,
+                                           tokens)
+    use_l2 = valid & ~byp
+
+    # ---- L2 bank queue (O3) ------------------------------------------------
+    bank = REQ.bank_index(addr, prm)
+    t_head = jnp.maximum(st.bank_free[bank], t_arr)
+    bank_free = st.bank_free.at[bank].set(
+        jnp.where(use_l2, t_head + prm.l2_svc, st.bank_free[bank]))
+    qdelay = jnp.where(use_l2, t_head - t_arr, 0.0)
+
+    # ---- L2 lookup ----------------------------------------------------------
+    sidx = REQ.set_index(addr, prm)
+    tset = st.tags[sidx]
+    is_line = tset == addr
+    hit = jnp.any(is_line) & use_l2
+    hit_way = jnp.argmax(is_line)
+    rset = st.rrip[sidx]
+    rset = jnp.where(hit, rset.at[hit_way].set(0), rset)
+
+    # ---- ③ fill + insertion (branchless, repro.policy) ---------------------
+    allocate = use_l2 & ~hit
+    # SRRIP aging to make a victim available
+    shift = prm.rrip_max - jnp.max(rset)
+    rset_aged = rset + jnp.where(allocate, shift, 0)
+    victim = jnp.argmax(rset_aged)
+    evicted = tset[victim]
+    victim_type = st.meta_type[sidx, victim]   # read BEFORE the overwrite
+
+    rank = REQ.insertion_rank(st, wtype, addr, prm, pa)
+
+    tags = st.tags.at[sidx, victim].set(jnp.where(allocate, addr, evicted))
+    rrip = st.rrip.at[sidx].set(
+        jnp.where(allocate, rset_aged.at[victim].set(rank), rset))
+    meta_type = st.meta_type.at[sidx, victim].set(
+        jnp.where(allocate, wtype, victim_type))
+
+    # EAF bookkeeping: remember evicted addresses; the periodic reset is
+    # a generation bump (state.py), not an array clear
+    ev_valid = allocate & (evicted >= 0)
+    eidx = REQ.eaf_index(evicted, prm)
+    eaf = st.eaf.at[eidx].set(
+        jnp.where(ev_valid, st.eaf_gen, st.eaf[eidx]))
+    eaf_ctr = st.eaf_ctr + ev_valid.astype(I32)
+    reset = eaf_ctr >= prm.eaf_capacity
+    eaf_gen = jnp.where(reset, st.eaf_gen + 1, st.eaf_gen)
+    eaf_ctr = jnp.where(reset, 0, eaf_ctr)
+
+    # ---- ④ DRAM two-queue FR-FCFS (branchless, repro.policy) ---------------
+    go_dram = valid & (byp | ~hit)
+    t_dram_arr = jnp.where(byp, t_arr, t_head + prm.l2_lat)
+    ch = REQ.dram_channel(addr, prm)
+    row = REQ.dram_row(addr, prm)
+    row_hit = (st.cur_row[ch] == row) & go_dram
+    occ, lat = REQ.dram_occ_lat(row_hit, prm)
+    hp = POL.is_high_priority(pa, wtype)
+    t0_hp = jnp.maximum(st.hp_free[ch], t_dram_arr)
+    t0_lp = jnp.maximum(jnp.maximum(st.lp_free[ch], st.hp_free[ch]),
+                        t_dram_arr)
+    t0 = jnp.where(hp, t0_hp, t0_lp)
+    hp_free = st.hp_free.at[ch].set(
+        jnp.where(go_dram & hp, t0 + occ, st.hp_free[ch]))
+    lp_free = st.lp_free.at[ch].set(
+        jnp.where(go_dram & ~hp, t0 + occ, st.lp_free[ch]))
+    cur_row = st.cur_row.at[ch].set(jnp.where(go_dram, row, st.cur_row[ch]))
+    t_done_dram = t0 + lat
+
+    t_done = jnp.where(hit, t_head + prm.l2_lat, t_done_dram)
+    t_done = jnp.where(valid, t_done, t_arr)
+
+    # ---- ① classifier + PC table + lifetime counters ------------------------
+    clf = CLF.observe(st.clf, w, hit,
+                      sampling_interval=prm.sampling_interval,
+                      mostly_hit_threshold=prm.mostly_hit_threshold,
+                      mostly_miss_threshold=prm.mostly_miss_threshold,
+                      weight=jnp.atleast_1d(valid.astype(I32)))
+    pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
+    pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
+    tot_hits = st.tot_hits.at[w].add(hit.astype(I32))
+    tot_acc = st.tot_acc.at[w].add(valid.astype(I32))
+
+    # ---- metrics -------------------------------------------------------------
+    qbin = REQ.qdelay_bin(qdelay)
+    metrics = dict(m)
+    metrics["qdelay_hist"] = m["qdelay_hist"].at[qbin].add(use_l2.astype(I32))
+    metrics["qdelay_sum"] = m["qdelay_sum"] + qdelay
+    metrics["l2_accesses"] = m["l2_accesses"] + use_l2.astype(I32)
+    metrics["l2_hits"] = m["l2_hits"] + hit.astype(I32)
+    metrics["dram_accesses"] = m["dram_accesses"] + go_dram.astype(I32)
+    metrics["row_hits"] = m["row_hits"] + row_hit.astype(I32)
+    metrics["bypasses"] = m["bypasses"] + byp.astype(I32)
+    metrics["evictions_by_type"] = m["evictions_by_type"].at[
+        victim_type].add(ev_valid.astype(I32))
+
+    new_st = st._replace(
+        tags=tags, rrip=rrip, meta_type=meta_type, bank_free=bank_free,
+        cur_row=cur_row, hp_free=hp_free, lp_free=lp_free, clf=clf,
+        eaf=eaf, eaf_gen=eaf_gen, eaf_ctr=eaf_ctr, pc_hits=pc_hits,
+        pc_acc=pc_acc, tot_hits=tot_hits, tot_acc=tot_acc,
+        metrics=metrics)
+    return new_st, t_done
+
+
+def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
+                  *, n_warps: int, lanes: int,
+                  prm: SimParams) -> Dict[str, Any]:
+    """One workload × one policy. `pa` is a traced pytree — vmappable."""
+    n_instr = trace_lines.shape[0]
+    tokens = POL.pcal_tokens(pa, n_warps)
+
+    # [W, I, ...] layout for per-warp program counters
+    lines_wi = jnp.swapaxes(trace_lines, 0, 1)
+    pcs_wi = jnp.swapaxes(trace_pcs, 0, 1)
+
+    st0 = init_state(n_warps, prm)
+    ready0 = jnp.zeros((n_warps,), F32)
+    ptr0 = jnp.zeros((n_warps,), I32)
+
+    def event_step(carry, _):
+        st, ready, ptr = carry
+        active = ptr < n_instr
+        w = jnp.argmin(jnp.where(active, ready, jnp.inf)).astype(I32)
+        i = ptr[w]
+        lines = lines_wi[w, i]                        # [L]
+        pc = pcs_wi[w, i]
+        t0 = ready[w]
+        lanes_idx = jnp.arange(lanes, dtype=I32)
+        t_arr = t0 + lanes_idx.astype(F32) * prm.lane_skew
+        valid = lines >= 0
+
+        def body(s, r):
+            return _request_step(s, r, prm, pa, tokens)
+
+        reqs = (t_arr, jnp.full((lanes,), w, I32), lines,
+                jnp.full((lanes,), pc, I32), valid)
+        st, dones = jax.lax.scan(body, st, reqs)
+        dmax = jnp.max(jnp.where(valid, dones, -jnp.inf))
+        dmin = jnp.min(jnp.where(valid, dones, jnp.inf))
+        has_req = jnp.isfinite(dmax)
+        stall = jnp.where(has_req, dmax - dmin, 0.0)
+        metrics = dict(st.metrics)
+        metrics["stall_cycles"] = metrics["stall_cycles"] + stall
+        st = st._replace(metrics=metrics)
+        new_ready = ready.at[w].set(
+            jnp.where(has_req, dmax + compute_gap, t0 + compute_gap))
+        new_ptr = ptr.at[w].add(1)
+        # snapshot for Fig 4: (warp, instr index, sampled ratio)
+        snap = (w, i, st.clf.ratio[w])
+        return (st, new_ready, new_ptr), snap
+
+    (st, ready, _), snaps = jax.lax.scan(
+        event_step, (st0, ready0, ptr0), None, length=n_instr * n_warps)
+
+    # scatter snapshots into a [I, W] ratio-over-time matrix
+    sw, si, sr = snaps
+    ratio_t = jnp.zeros((n_instr, n_warps), F32).at[si, sw].set(sr)
+
+    return REQ.finalize_outputs(st, ready, ratio_t, compute_gap,
+                                n_instr=n_instr, n_warps=n_warps, prm=prm)

@@ -1,0 +1,427 @@
+"""Wavefront engine (``engine="wavefront"``): batched round-lockstep
+event loop.
+
+Instead of popping ONE earliest-ready warp per `lax.scan` step (the exact
+event engine), each step pops a *wave* of the ``wave_size`` earliest-ready
+warps and services all their W×L requests vectorized. Because the wave is
+selected by readiness, its requests are close together in simulated time,
+which is what makes batched processing faithful. Each wave runs two
+passes:
+
+  1. **Cache pass** (scan over the L lanes): bypass decisions, tag
+     lookup, RRIP fill/eviction, EAF and PC-table bookkeeping, and the
+     classifier update (an O(B) gather/scatter form of
+     ``classifier.observe``). A lane sub-step carries at most ONE
+     request per warp, so the batched observe is equivalent to the event
+     loop's sequential per-request observes (warp ids are distinct —
+     pinned by the differential suite). None of these outcomes depend on
+     request *timing*, so the pass needs no queue state. Cross-slot
+     structural conflicts inside one sub-step (two wave warps filling
+     the same cache set) resolve last-write-wins in chronological slot
+     order via masked scatters.
+
+  2. **Timing pass** (no scan): all B×L requests of the wave, in
+     warp-major chronological order (the event loop's pop-and-service
+     order), go through segmented prefix queue recovery —
+     for the requests of one bank/channel queue, ``start_j = c_j +
+     max_{i<=j}(max(t_i, free) - c_i)`` where ``c`` is the exclusive
+     prefix sum of service occupancy (a cumsum + cummax per queue yields
+     exactly the sequential FR-FCFS arrival-order service times). The
+     DRAM row-buffer chain links each request to its true chronological
+     predecessor in its channel, and the low-priority queue's floor
+     folds in the running busy horizon of the wave's high-priority chain
+     (strict priority, as in the event engine).
+
+The approximation ladder (DESIGN.md §9): event (wave of 1, exact) →
+wavefront (wave of W/6, W/4 at stress populations — near-chronological;
+the differential suite pins the envelope) → full round-lockstep
+(``wave_size=n_warps`` — one scan step services an entire instruction
+round). A wave of one warp reduces every prefix op to the event
+engine's scalar update, so single-warp traces match the event path
+exactly.
+
+Cost: O((I·W/B + I) · L) sequential sub-steps with O(B)-vectorized work
+each, vs the event loop's O(I·W·L) sequential steps — this is what runs
+the 1k–4k-warp stress matrix (tracegen/stress.py) end-to-end.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import classifier as CLF
+from repro.core import warp_types as WT
+from repro.core.engine import request as REQ
+from repro.core.engine.state import SimParams, SimState, init_state
+from repro.policy import PolicyArrays, ops as POL
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+_NEG = -jnp.inf
+
+
+def default_wave_size(n_warps: int) -> int:
+    """Readiness-window size. W/6 keeps a wave chronologically tight
+    (warp populations that drifted apart never share a wave); calibrated
+    on the 15-workload × 4-policy differential matrix at the paper's 48
+    warps (worst |IPC| deviation 1.9%, worst makespan deviation 2.1% —
+    DESIGN.md §9). Above the differential-verified zone the stress
+    populations are W/4-waved: thousands of statistically similar warps
+    keep waves relatively tight, and the wider wave amortizes per-step
+    cost further."""
+    if n_warps > 256:
+        return n_warps // 4
+    return max(min(n_warps, 8), n_warps // 6)
+
+
+def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight,
+                      prm: SimParams) -> CLF.ClassifierState:
+    """``classifier.observe`` restricted to the B touched warps.
+
+    Equivalent to the full-width observe — an untouched warp's counters
+    don't change, so its window can never reset on this call — but costs
+    O(B) gather/scatter instead of O(W) elementwise work per sub-step,
+    which is what keeps the cache pass O(B) at stress-scale warp counts.
+    Wave warp ids are distinct, so the scatters don't collide. Parity
+    with `CLF.observe` is pinned by tests/test_engine_differential.py.
+    """
+    hits = clf.hits[w] + is_hit.astype(I32) * weight
+    accesses = clf.accesses[w] + weight
+    due = accesses >= prm.sampling_interval
+    ratio_now = hits.astype(jnp.float32) / jnp.maximum(accesses, 1)
+    new_type = WT.classify(ratio_now, accesses,
+                           mostly_hit_threshold=prm.mostly_hit_threshold,
+                           mostly_miss_threshold=prm.mostly_miss_threshold)
+    return CLF.ClassifierState(
+        hits=clf.hits.at[w].set(jnp.where(due, 0, hits)),
+        accesses=clf.accesses.at[w].set(jnp.where(due, 0, accesses)),
+        warp_type=clf.warp_type.at[w].set(
+            jnp.where(due, new_type, clf.warp_type[w])),
+        ratio=clf.ratio.at[w].set(jnp.where(due, ratio_now, clf.ratio[w])),
+    )
+
+
+def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, prm: SimParams,
+                pa: PolicyArrays, tokens) -> tuple:
+    """One lane sub-step of a wave: the timing-independent half of
+    ``event._request_step`` for [B] requests (at most one per warp),
+    slots in chronological order."""
+    m = st.metrics
+
+    # ---- ② bypass decision (shared branchless math) ------------------------
+    byp, wtype, pidx = REQ.bypass_decision(st, w, addr, pc, valid, prm, pa,
+                                           tokens)
+    use_l2 = valid & ~byp
+
+    # ---- L2 lookup (sub-step-start tags) -----------------------------------
+    sidx = REQ.set_index(addr, prm)
+    tset = st.tags[sidx]                              # [B, ways]
+    is_line = tset == addr[:, None]
+    hit = jnp.any(is_line, axis=1) & use_l2
+    hit_way = jnp.argmax(is_line, axis=1)
+    way_oh = jnp.arange(prm.ways, dtype=I32)[None, :] == hit_way[:, None]
+    rset = st.rrip[sidx]
+    rset = jnp.where(hit[:, None] & way_oh, 0, rset)
+
+    # ---- ③ fill + insertion -------------------------------------------------
+    allocate = use_l2 & ~hit
+    shift = prm.rrip_max - jnp.max(rset, axis=1)
+    rset_aged = rset + jnp.where(allocate, shift, 0)[:, None]
+    victim = jnp.argmax(rset_aged, axis=1)
+    evicted = jnp.take_along_axis(tset, victim[:, None], axis=1)[:, 0]
+    victim_type = st.meta_type[sidx, victim]          # read BEFORE overwrite
+    rank = REQ.insertion_rank(st, wtype, addr, prm, pa)
+
+    # masked scatters: an out-of-bounds set index drops the update, and
+    # duplicate-set conflicts resolve last-write-wins in arrival order
+    s_alloc = jnp.where(allocate, sidx, prm.sets)
+    tags = st.tags.at[s_alloc, victim].set(addr, mode="drop")
+    vict_oh = jnp.arange(prm.ways, dtype=I32)[None, :] == victim[:, None]
+    new_row = jnp.where(allocate[:, None],
+                        jnp.where(vict_oh, rank[:, None], rset_aged), rset)
+    s_l2 = jnp.where(use_l2, sidx, prm.sets)
+    rrip = st.rrip.at[s_l2].set(new_row, mode="drop")
+    meta_type = st.meta_type.at[s_alloc, victim].set(wtype, mode="drop")
+
+    # EAF bookkeeping: remember evicted addresses; the periodic reset is
+    # a generation bump (state.py), not an array clear
+    ev_valid = allocate & (evicted >= 0)
+    eidx = REQ.eaf_index(evicted, prm)
+    eaf = st.eaf.at[jnp.where(ev_valid, eidx, prm.eaf_bits)].set(
+        st.eaf_gen, mode="drop")
+    eaf_ctr = st.eaf_ctr + jnp.sum(ev_valid.astype(I32))
+    reset = eaf_ctr >= prm.eaf_capacity
+    eaf_gen = jnp.where(reset, st.eaf_gen + 1, st.eaf_gen)
+    eaf_ctr = jnp.where(reset, 0, eaf_ctr)
+
+    # ---- ① classifier + PC table + lifetime counters ------------------------
+    clf = _observe_gathered(st.clf, w, hit, valid.astype(I32), prm)
+    pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
+    pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
+    tot_hits = st.tot_hits.at[w].add(hit.astype(I32))
+    tot_acc = st.tot_acc.at[w].add(valid.astype(I32))
+
+    metrics = dict(m)
+    metrics["l2_accesses"] = m["l2_accesses"] + jnp.sum(use_l2.astype(I32))
+    metrics["l2_hits"] = m["l2_hits"] + jnp.sum(hit.astype(I32))
+    metrics["bypasses"] = m["bypasses"] + jnp.sum(byp.astype(I32))
+    metrics["evictions_by_type"] = m["evictions_by_type"].at[
+        victim_type].add(ev_valid.astype(I32))
+
+    new_st = st._replace(
+        tags=tags, rrip=rrip, meta_type=meta_type, clf=clf, eaf=eaf,
+        eaf_gen=eaf_gen, eaf_ctr=eaf_ctr, pc_hits=pc_hits, pc_acc=pc_acc,
+        tot_hits=tot_hits, tot_acc=tot_acc, metrics=metrics)
+    hp = POL.is_high_priority(pa, wtype)
+    return new_st, (t_arr, addr, valid, byp, use_l2, hit, hp)
+
+
+class QueueAnchors(NamedTuple):
+    """Per-queue service frontier, in two time axes.
+
+    ``*_ts`` is the largest L2-arrival (wave sort) time the queue has
+    serviced; ``*_sa`` the largest service-arrival time (equal to
+    ``*_ts`` for banks, but DRAM requests arrive at ``t_head + l2_lat``
+    after the L2 queue, so the axes differ there). Together with the
+    queue's busy-until (``bank_free``/``hp_free``/``lp_free`` in
+    SimState) they summarize the queue's backlog for the next wave:
+    ``backlog = free - sa``.
+    """
+    bank_ts: jnp.ndarray     # f32[banks]
+    hp_ts: jnp.ndarray       # f32[channels]
+    hp_sa: jnp.ndarray       # f32[channels]
+    lp_ts: jnp.ndarray       # f32[channels]
+    lp_sa: jnp.ndarray       # f32[channels]
+
+
+def init_anchors(prm: SimParams) -> QueueAnchors:
+    c = jnp.full((prm.dram_channels,), _NEG, F32)
+    return QueueAnchors(bank_ts=jnp.full((prm.banks,), _NEG, F32),
+                        hp_ts=c, hp_sa=c, lp_ts=c, lp_sa=c)
+
+
+def _carry_floor(free, last_ts, last_sa, t_s, t_svc):
+    """Work-conserving carry floor [Q, N] for the next wave's requests.
+
+    A request at/after the queue's serviced frontier (``t_s >= last_ts``)
+    waits for the full busy-until, exactly like the event engine. A
+    *retrograde* request — its warp raced ahead of the warps that last
+    used the queue, so in true event order it would have been serviced
+    amid that backlog, not after it — sees the queue's STANDING BACKLOG
+    (``free - last_sa``) anchored at its own service-arrival time instead
+    of the absolute end-of-service. Single-warp traces are always at the
+    frontier, so they stay exact.
+    """
+    backlog = (free - last_sa)[:, None]              # +inf if queue unused
+    interp = jnp.minimum(free[:, None], t_svc[None, :] + backlog)
+    return jnp.where(t_s[None, :] >= last_ts[:, None], free[:, None],
+                     interp)
+
+
+def _anchor_update(last, mask, t):
+    return jnp.maximum(last,
+                       jnp.max(jnp.where(mask, t[None, :], _NEG), axis=1))
+
+
+def _queue_prefix(mask, t_arr, occ, free):
+    """FIFO service start times for one queue family, vectorized.
+
+    mask: bool[Q, N] — request j belongs to queue q; slots in
+    chronological order. t_arr: f32[N] arrivals; occ: f32[N] per-request
+    occupancy; free: f32[Q, 1|N] per-slot busy-until floor.
+
+    Returns (start[Q, N], end[Q, N]); ``end`` is -inf outside ``mask`` so
+    row-wise maxima skip those entries.
+    """
+    occ_m = jnp.where(mask, occ[None, :], 0.0)
+    c = jnp.cumsum(occ_m, axis=1) - occ_m            # exclusive prefix occ
+    v = jnp.where(mask, jnp.maximum(t_arr[None, :], free) - c, _NEG)
+    start = c + jax.lax.cummax(v, axis=1)
+    end = jnp.where(mask, start + occ_m, _NEG)
+    return start, end
+
+
+def _timing_pass(st: SimState, an: QueueAnchors, recs,
+                 prm: SimParams) -> tuple:
+    """Arrival-ordered queue recovery for one wave's B×L requests.
+
+    Chronological bank/channel semantics come from segmented prefix
+    (cumsum/cummax) ops per L2 bank, DRAM channel and priority class over
+    the wave's requests in WARP-MAJOR order — warp slots ascend in ready
+    time (the wave selection argsort) and a warp's lanes stay
+    consecutive, which is exactly the event loop's processing order (pop
+    the earliest warp, service all its lanes back-to-back). Interleaving
+    by raw per-lane arrival instead would shred the DRAM row-buffer
+    streaks a streaming warp's consecutive lines produce. Cross-wave
+    carry uses the work-conserving backlog floor (``_carry_floor``).
+    """
+    t_s, addr_s, valid_s, byp_s, use_l2_s, hit_s, hp_s = \
+        [jnp.swapaxes(x, 0, 1).reshape(-1) for x in recs]  # [N = B*L]
+    n = t_s.shape[0]
+    slot = jnp.arange(n, dtype=I32)
+    # a wave of ONE warp is the event loop — no batching to compensate
+    # for, so the carry floor is the plain busy-until (bitwise parity
+    # with engine="event", asserted by the differential suite)
+    exact = recs[0].shape[1] == 1
+
+    def carry_floor(free, last_ts, last_sa, t_svc):
+        if exact:
+            return free[:, None]
+        return _carry_floor(free, last_ts, last_sa, t_s, t_svc)
+
+    # ---- L2 bank queues (O3) ----------------------------------------------
+    bank = REQ.bank_index(addr_s, prm)
+    bmask = (bank[None, :] == jnp.arange(prm.banks, dtype=I32)[:, None]) \
+        & use_l2_s[None, :]
+    svc = jnp.full((n,), prm.l2_svc, F32)
+    b_start, b_end = _queue_prefix(
+        bmask, t_s, svc,
+        carry_floor(st.bank_free, an.bank_ts, an.bank_ts, t_s))
+    t_head = jnp.sum(jnp.where(bmask, b_start, 0.0), axis=0)
+    bank_free = jnp.maximum(st.bank_free, jnp.max(b_end, axis=1))
+    qdelay = jnp.where(use_l2_s, t_head - t_s, 0.0)
+
+    # ---- ④ DRAM two-queue FR-FCFS ------------------------------------------
+    go_dram = valid_s & (byp_s | ~hit_s)
+    t_dram_arr = jnp.where(byp_s, t_s, t_head + prm.l2_lat)
+    ch = REQ.dram_channel(addr_s, prm)
+    row = REQ.dram_row(addr_s, prm)
+    n_ch = prm.dram_channels
+    cmask = (ch[None, :] == jnp.arange(n_ch, dtype=I32)[:, None]) \
+        & go_dram[None, :]
+
+    # row-buffer chain: each request's predecessor is the previous
+    # request in its channel within this wave, else the carried open row
+    inc = jax.lax.cummax(jnp.where(cmask, slot[None, :], -1), axis=1)
+    prev_idx = jnp.concatenate(
+        [jnp.full((n_ch, 1), -1, I32), inc[:, :-1]], axis=1)
+    prev_row = jnp.where(prev_idx >= 0,
+                         jnp.take(row, jnp.maximum(prev_idx, 0)),
+                         st.cur_row[:, None])
+    row_hit = (prev_row == row[None, :])[ch, slot] & go_dram
+    occ, lat = REQ.dram_occ_lat(row_hit, prm)
+
+    mask_hp = cmask & hp_s[None, :]
+    hp_carry = carry_floor(st.hp_free, an.hp_ts, an.hp_sa, t_dram_arr)
+    hp_start, hp_end = _queue_prefix(mask_hp, t_dram_arr, occ, hp_carry)
+    # strict priority: a low-priority request waits for the high queue's
+    # busy horizon at its chronological position
+    hp_busy = jnp.concatenate(
+        [jnp.full((n_ch, 1), _NEG),
+         jax.lax.cummax(hp_end, axis=1)[:, :-1]], axis=1)
+    lp_floor = jnp.maximum(
+        carry_floor(st.lp_free, an.lp_ts, an.lp_sa, t_dram_arr),
+        jnp.maximum(hp_carry, hp_busy))
+    mask_lp = cmask & ~hp_s[None, :]
+    lp_start, lp_end = _queue_prefix(mask_lp, t_dram_arr, occ, lp_floor)
+
+    t0 = jnp.where(hp_s, hp_start[ch, slot], lp_start[ch, slot])
+    hp_free = jnp.maximum(st.hp_free, jnp.max(hp_end, axis=1))
+    lp_free = jnp.maximum(st.lp_free, jnp.max(lp_end, axis=1))
+    last_idx = inc[:, -1]
+    cur_row = jnp.where(last_idx >= 0,
+                        jnp.take(row, jnp.maximum(last_idx, 0)),
+                        st.cur_row)
+
+    t_done = jnp.where(hit_s, t_head + prm.l2_lat, t0 + lat)
+    t_done = jnp.where(valid_s, t_done, t_s)
+
+    # ---- metrics ------------------------------------------------------------
+    m = st.metrics
+    qbin = REQ.qdelay_bin(qdelay)
+    metrics = dict(m)
+    metrics["qdelay_hist"] = m["qdelay_hist"].at[qbin].add(
+        use_l2_s.astype(I32))
+    metrics["qdelay_sum"] = m["qdelay_sum"] + jnp.sum(qdelay)
+    metrics["dram_accesses"] = m["dram_accesses"] + jnp.sum(
+        go_dram.astype(I32))
+    metrics["row_hits"] = m["row_hits"] + jnp.sum(row_hit.astype(I32))
+
+    new_st = st._replace(bank_free=bank_free, cur_row=cur_row,
+                         hp_free=hp_free, lp_free=lp_free, metrics=metrics)
+    new_an = QueueAnchors(
+        bank_ts=_anchor_update(an.bank_ts, bmask, t_s),
+        hp_ts=_anchor_update(an.hp_ts, mask_hp, t_s),
+        hp_sa=_anchor_update(an.hp_sa, mask_hp, t_dram_arr),
+        lp_ts=_anchor_update(an.lp_ts, mask_lp, t_s),
+        lp_sa=_anchor_update(an.lp_sa, mask_lp, t_dram_arr))
+    # back to the cache pass's [L, B] layout
+    lanes, b = recs[0].shape
+    t_done_lb = jnp.swapaxes(t_done.reshape(b, lanes), 0, 1)
+    return new_st, new_an, t_done_lb
+
+
+def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
+                  *, n_warps: int, lanes: int, prm: SimParams,
+                  wave_size: Optional[int] = None) -> Dict[str, Any]:
+    """One workload × one policy on the wavefront engine. Vmappable."""
+    n_instr = trace_lines.shape[0]
+    B = max(1, min(wave_size or default_wave_size(n_warps), n_warps))
+    # phase 1 (>= B warps active) services B instructions per wave; once
+    # fewer than B warps remain every wave advances all of them, so at
+    # most n_instr further waves finish the tail
+    n_waves = -(-n_instr * n_warps // B) + n_instr
+    tokens = POL.pcal_tokens(pa, n_warps)
+
+    lines_wi = jnp.swapaxes(trace_lines, 0, 1)      # [W, I, L]
+    pcs_wi = jnp.swapaxes(trace_pcs, 0, 1)          # [W, I]
+
+    st0 = init_state(n_warps, prm)
+    an0 = init_anchors(prm)
+    ready0 = jnp.zeros((n_warps,), F32)
+    ptr0 = jnp.zeros((n_warps,), I32)
+    ratio0 = jnp.zeros((n_instr, n_warps), F32)
+
+    def wave_step(carry, _):
+        st, an, ready, ptr, ratio_t = carry
+        active = ptr < n_instr
+        # wave = the B earliest-ready active warps; the stable argsort
+        # leaves slots in chronological order (ties by warp id, like the
+        # event loop's argmin)
+        order = jnp.argsort(jnp.where(active, ready, jnp.inf))
+        w_sel = order[:B].astype(I32)
+        slot_ok = active[w_sel]
+        i_sel = ptr[w_sel]
+        t0 = ready[w_sel]
+        lines_b = lines_wi[w_sel, i_sel]             # [B, L]
+        pc_b = pcs_wi[w_sel, i_sel]                  # [B]
+
+        def lane_step(s, xs):
+            lane, addr = xs                          # i32[], i32[B]
+            valid = (addr >= 0) & slot_ok
+            t_arr = t0 + lane.astype(F32) * prm.lane_skew
+            return _cache_pass(s, t_arr, w_sel, addr, pc_b, valid, prm,
+                               pa, tokens)
+
+        st, recs = jax.lax.scan(
+            lane_step, st,
+            (jnp.arange(lanes, dtype=I32), jnp.swapaxes(lines_b, 0, 1)))
+        st, an, t_done = _timing_pass(st, an, recs, prm)     # [L, B]
+
+        valid_lb = recs[2]
+        dmax = jnp.max(jnp.where(valid_lb, t_done, -jnp.inf), axis=0)
+        dmin = jnp.min(jnp.where(valid_lb, t_done, jnp.inf), axis=0)
+        has_req = jnp.isfinite(dmax)
+        stall = jnp.where(has_req & slot_ok, dmax - dmin, 0.0)
+        metrics = dict(st.metrics)
+        metrics["stall_cycles"] = metrics["stall_cycles"] + jnp.sum(stall)
+        st = st._replace(metrics=metrics)
+
+        w_ok = jnp.where(slot_ok, w_sel, n_warps)    # OOB -> dropped
+        ready = ready.at[w_ok].set(
+            jnp.where(has_req, dmax + compute_gap, t0 + compute_gap),
+            mode="drop")
+        ptr = ptr.at[w_ok].add(1, mode="drop")
+        # Fig 4 snapshot: sampled ratio after each serviced instruction
+        ratio_t = ratio_t.at[i_sel, w_ok].set(st.clf.ratio[w_sel],
+                                              mode="drop")
+        return (st, an, ready, ptr, ratio_t), None
+
+    (st, _, ready, _, ratio_t), _ = jax.lax.scan(
+        wave_step, (st0, an0, ready0, ptr0, ratio0), None, length=n_waves)
+
+    return REQ.finalize_outputs(st, ready, ratio_t, compute_gap,
+                                n_instr=n_instr, n_warps=n_warps, prm=prm)

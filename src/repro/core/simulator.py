@@ -1,8 +1,8 @@
-"""Altitude-A faithful MeDiC simulator (paper §3, evaluated as §5).
+"""Altitude-A faithful MeDiC simulator (paper §3, evaluated as §5) —
+facade over the ``repro.core.engine`` subsystem.
 
 A request-level discrete-event model of the GPU shared memory hierarchy,
-implemented as pure JAX (`lax.scan` over rounds × chronologically sorted
-requests) so a full policy sweep runs jitted on CPU.
+implemented as pure JAX so a full policy sweep runs jitted on CPU.
 
 Modelled structures (paper's evaluation fidelity, not RTL):
   * warps in lockstep: a memory instruction issues `lanes` coalesced line
@@ -20,376 +20,27 @@ Policy decisions go through the branchless `repro.policy` engine: the
 policy enters the jitted computation as a *traced* `PolicyArrays` pytree,
 so every policy shares ONE trace per workload shape, and `simulate_sweep`
 vmaps a stacked policy batch (optionally × seed-stacked traces) in a
-single jitted call — the whole Fig 7/8 sweep compiles once and runs
-batched (DESIGN.md §3).
+single jitted call (DESIGN.md §3).
 
-Approximation (recorded in DESIGN.md §8): requests are processed
-chronologically *within* an instruction round but rounds are processed in
-lockstep across warps, so far-ahead warps can observe slightly stale queue
-state. All policies share the machinery, so comparisons are like-for-like.
+Two engines share the state and per-request math (DESIGN.md §9):
+``engine="event"`` (default) is the exact chronological discrete-event
+loop; ``engine="wavefront"`` is the batched round-lockstep event loop
+that services waves of earliest-ready warps vectorized — the path that
+runs the tracegen stress matrix (1k–4k warps) end-to-end.
+
+This module re-exports the public API for backward compatibility; the
+implementation lives in ``repro/core/engine/``.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, NamedTuple, Sequence
+from repro.core.engine import (ENGINES, N_QBINS, SimParams, SimState,
+                               init_state, simulate, simulate_sweep,
+                               _simulate_batch, _simulate_one)
+from repro.core.engine.event import _request_step, simulate_core \
+    as _simulate_core
+from repro.policy import Policy, PolicyArrays
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import classifier as CLF
-from repro.core import warp_types as WT
-from repro.policy import Policy, PolicyArrays, ops as POL
-from repro.policy import stack_policies, to_arrays
-
-F32 = jnp.float32
-I32 = jnp.int32
-
-_hash = POL.hash_index
-
-
-# ---------------------------------------------------------------------------
-# static configuration
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class SimParams:
-    sets: int = 512
-    ways: int = 8
-    banks: int = 6
-    l2_svc: float = 4.0        # bank occupancy per request (cycles)
-    l2_lat: float = 20.0       # tag+data latency after reaching bank head
-    dram_channels: int = 8
-    row_lines: int = 32        # lines per DRAM row
-    # occupancy (pipelined throughput) vs latency (critical path) split
-    occ_rowhit: float = 5.0
-    occ_rowmiss: float = 10.0
-    t_rowhit: float = 100.0
-    t_rowmiss: float = 200.0
-    lane_skew: float = 0.5     # per-lane issue skew within an instruction
-    rrip_max: int = 7
-    eaf_bits: int = 4096
-    eaf_capacity: int = 1024   # filter reset period (insertions)
-    pc_entries: int = 256
-    sampling_interval: int = 64
-    mostly_hit_threshold: float = 0.8
-    mostly_miss_threshold: float = 0.2
-    # energy model (relative units, GPUWattch-flavoured)
-    e_l2: float = 1.0
-    e_dram: float = 12.0
-    e_static: float = 0.08     # per cycle of makespan
-
-
-class SimState(NamedTuple):
-    tags: jnp.ndarray          # i32[sets, ways] line addr or -1
-    rrip: jnp.ndarray          # i32[sets, ways]
-    meta_type: jnp.ndarray     # i32[sets, ways] inserting warp's type
-    bank_free: jnp.ndarray     # f32[banks]
-    cur_row: jnp.ndarray       # i32[channels]
-    hp_free: jnp.ndarray       # f32[channels]
-    lp_free: jnp.ndarray       # f32[channels]
-    clf: CLF.ClassifierState
-    eaf: jnp.ndarray           # i32[eaf_bits] bloom bits
-    eaf_ctr: jnp.ndarray       # i32[] insertions since reset
-    pc_hits: jnp.ndarray       # i32[pc_entries]
-    pc_acc: jnp.ndarray        # i32[pc_entries]
-    tot_hits: jnp.ndarray      # i32[W] lifetime counters (never reset)
-    tot_acc: jnp.ndarray       # i32[W]
-    metrics: Dict[str, jnp.ndarray]
-
-
-_QBINS = jnp.asarray([0, 1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 1 << 30],
-                     jnp.float32)
-N_QBINS = 12
-
-
-def init_state(n_warps: int, prm: SimParams) -> SimState:
-    metrics = {
-        "qdelay_hist": jnp.zeros((N_QBINS,), I32),
-        "qdelay_sum": jnp.zeros((), F32),
-        "l2_accesses": jnp.zeros((), I32),
-        "l2_hits": jnp.zeros((), I32),
-        "dram_accesses": jnp.zeros((), I32),
-        "row_hits": jnp.zeros((), I32),
-        "bypasses": jnp.zeros((), I32),
-        "stall_cycles": jnp.zeros((), F32),
-        "evictions_by_type": jnp.zeros((WT.NUM_TYPES,), I32),
-    }
-    return SimState(
-        tags=jnp.full((prm.sets, prm.ways), -1, I32),
-        rrip=jnp.full((prm.sets, prm.ways), prm.rrip_max, I32),
-        meta_type=jnp.full((prm.sets, prm.ways), WT.BALANCED, I32),
-        bank_free=jnp.zeros((prm.banks,), F32),
-        cur_row=jnp.full((prm.dram_channels,), -1, I32),
-        hp_free=jnp.zeros((prm.dram_channels,), F32),
-        lp_free=jnp.zeros((prm.dram_channels,), F32),
-        clf=CLF.init(n_warps),
-        eaf=jnp.zeros((prm.eaf_bits,), I32),
-        eaf_ctr=jnp.zeros((), I32),
-        pc_hits=jnp.zeros((prm.pc_entries,), I32),
-        pc_acc=jnp.zeros((prm.pc_entries,), I32),
-        tot_hits=jnp.zeros((n_warps,), I32),
-        tot_acc=jnp.zeros((n_warps,), I32),
-        metrics=metrics,
-    )
-
-
-# ---------------------------------------------------------------------------
-# one request
-# ---------------------------------------------------------------------------
-
-def _request_step(st: SimState, req, prm: SimParams, pa: PolicyArrays,
-                  tokens) -> tuple:
-    t_arr, w, addr, pc, valid = req
-    m = st.metrics
-    wtype = st.clf.warp_type[w]
-    pidx = _hash(pc, 3, prm.pc_entries)
-
-    # ---- ② bypass decision (branchless, repro.policy) ----------------------
-    # periodic probe so a reformed warp can be re-learned: every 8th access
-    # of a bypassing warp still takes the cache path
-    probe = (st.clf.accesses[w] % 8) == 0
-    rand_u = _hash(addr, 7, 65536).astype(F32) / 65536.0
-    byp = POL.bypass_decision(pa, wtype=wtype, probe=probe,
-                              token_bit=tokens[w],
-                              pc_hits=st.pc_hits[pidx],
-                              pc_acc=st.pc_acc[pidx], rand_u=rand_u)
-    byp = byp & valid
-
-    use_l2 = valid & ~byp
-
-    # ---- L2 bank queue (O3) ------------------------------------------------
-    bank = _hash(addr, 1, prm.banks)
-    t_head = jnp.maximum(st.bank_free[bank], t_arr)
-    bank_free = st.bank_free.at[bank].set(
-        jnp.where(use_l2, t_head + prm.l2_svc, st.bank_free[bank]))
-    qdelay = jnp.where(use_l2, t_head - t_arr, 0.0)
-
-    # ---- L2 lookup ----------------------------------------------------------
-    sidx = _hash(addr, 2, prm.sets)
-    tset = st.tags[sidx]
-    is_line = tset == addr
-    hit = jnp.any(is_line) & use_l2
-    hit_way = jnp.argmax(is_line)
-    rset = st.rrip[sidx]
-    rset = jnp.where(hit, rset.at[hit_way].set(0), rset)
-
-    # ---- ③ fill + insertion (branchless, repro.policy) ---------------------
-    allocate = use_l2 & ~hit
-    # SRRIP aging to make a victim available
-    shift = prm.rrip_max - jnp.max(rset)
-    rset_aged = rset + jnp.where(allocate, shift, 0)
-    victim = jnp.argmax(rset_aged)
-    evicted = tset[victim]
-
-    ebit = st.eaf[_hash(addr, 5, prm.eaf_bits)] > 0
-    rank = POL.insertion_rank(pa, wtype=wtype, eaf_bit=ebit,
-                              rrip_max=prm.rrip_max)
-
-    tags = st.tags.at[sidx, victim].set(jnp.where(allocate, addr, evicted))
-    rrip = st.rrip.at[sidx].set(
-        jnp.where(allocate, rset_aged.at[victim].set(rank), rset))
-    meta_type = st.meta_type.at[sidx, victim].set(
-        jnp.where(allocate, wtype, st.meta_type[sidx, victim]))
-
-    # EAF bookkeeping: remember evicted addresses; periodic reset
-    ev_valid = allocate & (evicted >= 0)
-    eaf = st.eaf.at[_hash(evicted, 5, prm.eaf_bits)].set(
-        jnp.where(ev_valid, 1, st.eaf[_hash(evicted, 5, prm.eaf_bits)]))
-    eaf_ctr = st.eaf_ctr + ev_valid.astype(I32)
-    reset = eaf_ctr >= prm.eaf_capacity
-    eaf = jnp.where(reset, jnp.zeros_like(eaf), eaf)
-    eaf_ctr = jnp.where(reset, 0, eaf_ctr)
-
-    # ---- ④ DRAM two-queue FR-FCFS (branchless, repro.policy) ---------------
-    go_dram = valid & (byp | ~hit)
-    t_dram_arr = jnp.where(byp, t_arr, t_head + prm.l2_lat)
-    ch = _hash(addr // prm.row_lines, 4, prm.dram_channels)
-    row = (addr // prm.row_lines).astype(I32)
-    row_hit = (st.cur_row[ch] == row) & go_dram
-    occ = jnp.where(row_hit, prm.occ_rowhit, prm.occ_rowmiss)
-    lat = jnp.where(row_hit, prm.t_rowhit, prm.t_rowmiss)
-    hp = POL.is_high_priority(pa, wtype)
-    t0_hp = jnp.maximum(st.hp_free[ch], t_dram_arr)
-    t0_lp = jnp.maximum(jnp.maximum(st.lp_free[ch], st.hp_free[ch]),
-                        t_dram_arr)
-    t0 = jnp.where(hp, t0_hp, t0_lp)
-    hp_free = st.hp_free.at[ch].set(
-        jnp.where(go_dram & hp, t0 + occ, st.hp_free[ch]))
-    lp_free = st.lp_free.at[ch].set(
-        jnp.where(go_dram & ~hp, t0 + occ, st.lp_free[ch]))
-    cur_row = st.cur_row.at[ch].set(jnp.where(go_dram, row, st.cur_row[ch]))
-    t_done_dram = t0 + lat
-
-    t_done = jnp.where(hit, t_head + prm.l2_lat, t_done_dram)
-    t_done = jnp.where(valid, t_done, t_arr)
-
-    # ---- ① classifier + PC table + lifetime counters ------------------------
-    clf = CLF.observe(st.clf, w, hit,
-                      sampling_interval=prm.sampling_interval,
-                      mostly_hit_threshold=prm.mostly_hit_threshold,
-                      mostly_miss_threshold=prm.mostly_miss_threshold,
-                      weight=jnp.atleast_1d(valid.astype(I32)))
-    pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
-    pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
-    tot_hits = st.tot_hits.at[w].add(hit.astype(I32))
-    tot_acc = st.tot_acc.at[w].add(valid.astype(I32))
-
-    # ---- metrics -------------------------------------------------------------
-    qbin = jnp.sum(qdelay >= _QBINS[1:-1]).astype(I32)
-    metrics = dict(m)
-    metrics["qdelay_hist"] = m["qdelay_hist"].at[qbin].add(use_l2.astype(I32))
-    metrics["qdelay_sum"] = m["qdelay_sum"] + qdelay
-    metrics["l2_accesses"] = m["l2_accesses"] + use_l2.astype(I32)
-    metrics["l2_hits"] = m["l2_hits"] + hit.astype(I32)
-    metrics["dram_accesses"] = m["dram_accesses"] + go_dram.astype(I32)
-    metrics["row_hits"] = m["row_hits"] + row_hit.astype(I32)
-    metrics["bypasses"] = m["bypasses"] + byp.astype(I32)
-    metrics["evictions_by_type"] = m["evictions_by_type"].at[
-        st.meta_type[sidx, victim]].add(ev_valid.astype(I32))
-
-    new_st = SimState(tags, rrip, meta_type, bank_free, cur_row, hp_free,
-                      lp_free, clf, eaf, eaf_ctr, pc_hits, pc_acc,
-                      tot_hits, tot_acc, metrics)
-    return new_st, t_done
-
-
-# ---------------------------------------------------------------------------
-# full simulation
-# ---------------------------------------------------------------------------
-
-def _simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
-                   *, n_warps: int, lanes: int,
-                   prm: SimParams) -> Dict[str, Any]:
-    """One workload × one policy. `pa` is a traced pytree — vmappable."""
-    n_instr = trace_lines.shape[0]
-    tokens = POL.pcal_tokens(pa, n_warps)
-
-    # [W, I, ...] layout for per-warp program counters
-    lines_wi = jnp.swapaxes(trace_lines, 0, 1)
-    pcs_wi = jnp.swapaxes(trace_pcs, 0, 1)
-
-    st0 = init_state(n_warps, prm)
-    ready0 = jnp.zeros((n_warps,), F32)
-    ptr0 = jnp.zeros((n_warps,), I32)
-
-    def event_step(carry, _):
-        st, ready, ptr = carry
-        active = ptr < n_instr
-        w = jnp.argmin(jnp.where(active, ready, jnp.inf)).astype(I32)
-        i = ptr[w]
-        lines = lines_wi[w, i]                        # [L]
-        pc = pcs_wi[w, i]
-        t0 = ready[w]
-        lanes_idx = jnp.arange(lanes, dtype=I32)
-        t_arr = t0 + lanes_idx.astype(F32) * prm.lane_skew
-        valid = lines >= 0
-
-        def body(s, r):
-            return _request_step(s, r, prm, pa, tokens)
-
-        reqs = (t_arr, jnp.full((lanes,), w, I32), lines,
-                jnp.full((lanes,), pc, I32), valid)
-        st, dones = jax.lax.scan(body, st, reqs)
-        dmax = jnp.max(jnp.where(valid, dones, -jnp.inf))
-        dmin = jnp.min(jnp.where(valid, dones, jnp.inf))
-        has_req = jnp.isfinite(dmax)
-        stall = jnp.where(has_req, dmax - dmin, 0.0)
-        metrics = dict(st.metrics)
-        metrics["stall_cycles"] = metrics["stall_cycles"] + stall
-        st = st._replace(metrics=metrics)
-        new_ready = ready.at[w].set(
-            jnp.where(has_req, dmax + compute_gap, t0 + compute_gap))
-        new_ptr = ptr.at[w].add(1)
-        # snapshot for Fig 4: (warp, instr index, sampled ratio)
-        snap = (w, i, st.clf.ratio[w])
-        return (st, new_ready, new_ptr), snap
-
-    (st, ready, _), snaps = jax.lax.scan(
-        event_step, (st0, ready0, ptr0), None, length=n_instr * n_warps)
-
-    # scatter snapshots into a [I, W] ratio-over-time matrix
-    sw, si, sr = snaps
-    ratio_t = jnp.zeros((n_instr, n_warps), F32).at[si, sw].set(sr)
-
-    makespan = jnp.max(ready)
-    m = dict(st.metrics)
-    total_instr = jnp.asarray(n_instr * n_warps, F32)
-    # System throughput in a steady state where finished warps' slots are
-    # backfilled by fresh thread blocks (as on a real GPU): the sum of
-    # per-warp progress rates. makespan-based IPC is also reported.
-    per_warp_time = jnp.maximum(ready - compute_gap, 1.0)
-    ipc = jnp.sum(n_instr / per_warp_time)
-    ipc_makespan = total_instr / jnp.maximum(makespan, 1.0)
-    energy = (m["l2_accesses"] * prm.e_l2 + m["dram_accesses"] * prm.e_dram
-              + makespan * prm.e_static)
-    out = dict(m)
-    out.update({
-        "makespan": makespan,
-        "ipc": ipc,
-        "ipc_makespan": ipc_makespan,
-        "warp_time": per_warp_time,
-        "energy": energy,
-        "perf_per_energy": ipc / energy * 1e3,
-        "warp_hit_ratio": st.tot_hits / jnp.maximum(st.tot_acc, 1),
-        "warp_type": st.clf.warp_type,
-        "ratio_over_time": ratio_t,            # [I, W]
-        "miss_rate": 1.0 - m["l2_hits"] / jnp.maximum(m["l2_accesses"], 1),
-        "mean_qdelay": m["qdelay_sum"] / jnp.maximum(m["l2_accesses"], 1),
-    })
-    return out
-
-
-@partial(jax.jit, static_argnames=("prm", "n_warps", "lanes"))
-def _simulate_one(trace_lines, trace_pcs, compute_gap, pa, *, n_warps: int,
-                  lanes: int, prm: SimParams) -> Dict[str, Any]:
-    return _simulate_core(trace_lines, trace_pcs, compute_gap, pa,
-                          n_warps=n_warps, lanes=lanes, prm=prm)
-
-
-@partial(jax.jit, static_argnames=("prm", "n_warps", "lanes"))
-def _simulate_batch(trace_lines, trace_pcs, compute_gap, pa_batch, *,
-                    n_warps: int, lanes: int, prm: SimParams):
-    one = partial(_simulate_core, n_warps=n_warps, lanes=lanes, prm=prm)
-    if trace_lines.ndim == 4:      # seed-stacked traces [S, I, W, L]
-        over_seeds = jax.vmap(one, in_axes=(0, 0, 0, None))
-        return jax.vmap(over_seeds, in_axes=(None, None, None, 0))(
-            trace_lines, trace_pcs, compute_gap, pa_batch)
-    return jax.vmap(one, in_axes=(None, None, None, 0))(
-        trace_lines, trace_pcs, compute_gap, pa_batch)
-
-
-def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
-             lanes: int, prm: SimParams, pol: Policy) -> Dict[str, Any]:
-    """Run one workload under one policy.
-
-    True discrete-event order: each outer step pops the globally earliest
-    ready warp and services its next memory instruction, so queue counters
-    are updated chronologically (up to intra-instruction lane skew).
-
-    The policy enters as a traced `PolicyArrays`, so every `Policy` preset
-    reuses the same compiled executable for a given workload shape.
-
-    trace_lines: i32[I, W, L]; trace_pcs: i32[I, W].
-    Returns metrics dict (all jnp arrays).
-    """
-    return _simulate_one(trace_lines, trace_pcs, compute_gap,
-                         to_arrays(pol), n_warps=n_warps, lanes=lanes,
-                         prm=prm)
-
-
-def simulate_sweep(trace_lines, trace_pcs, compute_gap,
-                   policies: Sequence[Policy], *, n_warps: int, lanes: int,
-                   prm: SimParams) -> Dict[str, Any]:
-    """Run a whole policy sweep in ONE jitted, vmapped call.
-
-    trace_lines may be [I, W, L] (one workload instance — outputs get a
-    leading policy axis P) or seed-stacked [S, I, W, L] (outputs get
-    leading axes [P, S]); trace_pcs/compute_gap follow suit.
-
-    Metrics match per-policy `simulate` calls bit-for-bit (the parity is
-    enforced by tests/test_policy_engine.py).
-    """
-    pa = stack_policies(policies)
-    return _simulate_batch(trace_lines, trace_pcs, compute_gap, pa,
-                           n_warps=n_warps, lanes=lanes, prm=prm)
+__all__ = [
+    "ENGINES", "N_QBINS", "Policy", "PolicyArrays", "SimParams",
+    "SimState", "init_state", "simulate", "simulate_sweep",
+]

@@ -1,0 +1,226 @@
+"""Differential suite: wavefront engine vs the exact event engine.
+
+Three rungs, mirroring the repo's other ref-vs-vectorized pairs
+(`pool_ref`, `tracegen/ref.py`):
+
+  1. single-warp traces — EXACT parity (a wave of one warp reduces every
+     prefix op to the event engine's scalar update);
+  2. ``wave_size=1`` at paper scale — exact parity (the wave machinery
+     with chronological selection IS the event loop);
+  3. default wave size at paper scale — documented tolerance: ≤2% on
+     IPC/makespan and identical Fig 7 policy ordering, across all 15
+     workloads (DESIGN.md §9 accuracy envelope).
+
+Plus the batched-classifier property tests the wavefront engine relies
+on: an [N]-shaped ``classifier.observe`` with distinct warp ids must
+equal N sequential scalar observes, window resets included.
+"""
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import classifier as CLF
+from repro.core import tracegen as TG
+from repro.core import workloads as WL
+from repro.core.simulator import SimParams, simulate, simulate_sweep
+
+PRM = SimParams()
+# one policy per mechanism family, matching the stress-matrix sweep
+DIFF_POLICIES = (BL.BASELINE, BL.PCAL, BL.WBYP, BL.MEDIC)
+
+INT_KEYS = ("l2_accesses", "l2_hits", "dram_accesses", "row_hits",
+            "bypasses", "qdelay_hist", "evictions_by_type")
+
+
+def _run_pair(trace, n_warps, lanes, policies, **wf_kw):
+    args = (jnp.asarray(trace["lines"]), jnp.asarray(trace["pcs"]),
+            jnp.asarray(trace["compute_gap"]))
+    kw = dict(n_warps=n_warps, lanes=lanes, prm=PRM)
+    ev = simulate_sweep(*args, policies, engine="event", **kw)
+    wf = simulate_sweep(*args, policies, engine="wavefront", **kw, **wf_kw)
+    tonp = lambda d: {k: np.asarray(v) for k, v in d.items()}
+    return tonp(ev), tonp(wf)
+
+
+# ---------------------------------------------------------------------------
+# rung 1: single-warp traces are exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["BFS", "BP"])
+def test_single_warp_exact(workload):
+    spec = dataclasses.replace(
+        TG.TraceSpec.from_workload(WL.WORKLOADS[workload]), n_warps=1)
+    tr = TG.generate(spec, seed=0)
+    ev, wf = _run_pair(tr, 1, spec.lines_per_instr, DIFF_POLICIES)
+    for k in INT_KEYS:
+        assert np.array_equal(ev[k], wf[k]), k
+    for k in ("makespan", "ipc", "stall_cycles", "qdelay_sum",
+              "warp_hit_ratio", "ratio_over_time"):
+        np.testing.assert_allclose(wf[k], ev[k], rtol=1e-5, atol=1e-5,
+                                   err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# rung 2: wave_size=1 IS the event loop
+# ---------------------------------------------------------------------------
+
+def test_wave_of_one_matches_event_at_paper_scale():
+    spec = WL.WORKLOADS["BP"]
+    tr = WL.generate(spec, seed=0)
+    ev, wf = _run_pair(tr, spec.n_warps, spec.lines_per_instr,
+                       (BL.BASELINE, BL.MEDIC), wave_size=1)
+    for k in ev:
+        np.testing.assert_allclose(wf[k], ev[k], rtol=1e-5, atol=1e-5,
+                                   err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# rung 3: default wave size, tolerance + ordering across all 15 workloads
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _pair_48(workload: str):
+    spec = WL.WORKLOADS[workload]
+    tr = WL.generate(spec, seed=0)
+    return _run_pair(tr, spec.n_warps, spec.lines_per_instr, DIFF_POLICIES)
+
+
+@pytest.mark.parametrize("workload", WL.WORKLOAD_NAMES)
+def test_tolerance_and_ordering_at_48_warps(workload):
+    """Measured accuracy envelope at the default wave size (W//6):
+    worst |IPC| 1.9% and worst makespan 2.1% over the 15-workload ×
+    4-policy matrix (DESIGN.md §9) — asserted at 2% / 2.5%."""
+    ev, wf = _pair_48(workload)
+    ipc_rel = np.abs(wf["ipc"] - ev["ipc"]) / ev["ipc"]
+    mk_rel = np.abs(wf["makespan"] - ev["makespan"]) / ev["makespan"]
+    assert ipc_rel.max() <= 0.02, (workload, ipc_rel)
+    assert mk_rel.max() <= 0.025, (workload, mk_rel)
+    # identical Fig 7 policy ordering
+    assert np.array_equal(np.argsort(wf["ipc"]), np.argsort(ev["ipc"])), \
+        (workload, wf["ipc"], ev["ipc"])
+
+
+def test_aggregate_counters_close_at_48_warps():
+    """Decision-dependent counters may drift slightly with ordering, but
+    totals must stay conserved and close."""
+    ev, wf = _pair_48("BFS")
+    total = ev["l2_accesses"] + ev["bypasses"]
+    assert np.array_equal(total, wf["l2_accesses"] + wf["bypasses"])
+    for k in ("l2_hits", "dram_accesses"):
+        np.testing.assert_allclose(wf[k], ev[k], rtol=0.02, err_msg=k)
+
+
+def test_wavefront_sweep_matches_per_policy_bitwise():
+    """The vmapped wavefront sweep must equal per-policy wavefront
+    `simulate` calls bit-for-bit, mirroring the event-engine guarantee
+    in tests/test_policy_engine.py."""
+    spec = WL.WORKLOADS["BP"]
+    tr = WL.generate(spec, seed=0)
+    args = (jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+            jnp.asarray(tr["compute_gap"]))
+    kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM,
+              engine="wavefront")
+    sweep = {k: np.asarray(v) for k, v in
+             simulate_sweep(*args, DIFF_POLICIES, **kw).items()}
+    for i, pol in enumerate(DIFF_POLICIES):
+        one = simulate(*args, pol=pol, **kw)
+        for key, v in one.items():
+            assert np.array_equal(np.asarray(v), sweep[key][i]), \
+                (pol.name, key)
+
+
+def test_unknown_engine_rejected():
+    spec = WL.WORKLOADS["BP"]
+    tr = WL.generate(spec, seed=0)
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+                 jnp.asarray(tr["compute_gap"]), n_warps=spec.n_warps,
+                 lanes=spec.lines_per_instr, prm=PRM, pol=BL.MEDIC,
+                 engine="warp-drive")
+
+
+# ---------------------------------------------------------------------------
+# batched classifier.observe == N sequential scalar observes
+# ---------------------------------------------------------------------------
+
+def _observe_kw(interval=16):
+    return dict(sampling_interval=interval, mostly_hit_threshold=0.8,
+                mostly_miss_threshold=0.2)
+
+
+def _states_equal(a: CLF.ClassifierState, b: CLF.ClassifierState):
+    for name in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, name)),
+                              np.asarray(getattr(b, name))), name
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_observe_equals_sequential_scalar(seed):
+    """One batched observe over N DISTINCT warps == N scalar observes,
+    in any order, including the weight-0 (invalid lane) path."""
+    rng = np.random.default_rng(seed)
+    n = 24
+    batched = seq = CLF.init(n)
+    for _ in range(40):                       # ~2.5 windows per warp
+        warps = rng.permutation(n)[:rng.integers(1, n + 1)]
+        hits = rng.random(warps.size) < 0.6
+        weights = (rng.random(warps.size) < 0.8).astype(np.int32)
+        batched = CLF.observe(batched, jnp.asarray(warps),
+                              jnp.asarray(hits), weight=jnp.asarray(weights),
+                              **_observe_kw())
+        for w, h, wt in zip(warps, hits, weights):
+            seq = CLF.observe(seq, jnp.asarray(w), jnp.asarray(h),
+                              weight=jnp.asarray([int(wt)]), **_observe_kw())
+        _states_equal(batched, seq)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_gathered_observe_matches_full_observe(seed):
+    """The wavefront's O(B) gather/scatter observe must equal the full
+    classifier.observe for distinct warp ids (an untouched warp's window
+    can never reset, so restricting the update to touched rows is
+    lossless)."""
+    from repro.core.engine.wavefront import _observe_gathered
+    prm = SimParams(sampling_interval=8)
+    rng = np.random.default_rng(seed)
+    n = 32
+    full = gath = CLF.init(n)
+    for _ in range(60):
+        warps = rng.permutation(n)[:rng.integers(1, 12)]
+        hits = rng.random(warps.size) < 0.5
+        weights = (rng.random(warps.size) < 0.9).astype(np.int32)
+        full = CLF.observe(full, jnp.asarray(warps), jnp.asarray(hits),
+                           sampling_interval=prm.sampling_interval,
+                           mostly_hit_threshold=prm.mostly_hit_threshold,
+                           mostly_miss_threshold=prm.mostly_miss_threshold,
+                           weight=jnp.asarray(weights))
+        gath = _observe_gathered(gath, jnp.asarray(warps),
+                                 jnp.asarray(hits), jnp.asarray(weights),
+                                 prm)
+        _states_equal(full, gath)
+
+
+def test_batched_observe_window_resets_fire_identically():
+    """Warps straddling the sampling boundary must reset (and re-classify)
+    on exactly the same observe call in batched and scalar form."""
+    interval = 8
+    n = 4
+    batched = seq = CLF.init(n)
+    # drive warp w with hit-pattern w%2; after `interval` observes each
+    # warp's window must have reset exactly once
+    for step in range(interval):
+        warps = jnp.arange(n)
+        hits = jnp.asarray([w % 2 == 0 for w in range(n)])
+        batched = CLF.observe(batched, warps, hits,
+                              **_observe_kw(interval))
+        for w in range(n):
+            seq = CLF.observe(seq, jnp.asarray(w), hits[w],
+                              **_observe_kw(interval))
+        _states_equal(batched, seq)
+    assert np.all(np.asarray(batched.accesses) == 0)      # window reset
+    assert np.all(np.asarray(batched.ratio)
+                  == np.asarray([1.0, 0.0, 1.0, 0.0]))    # re-sampled

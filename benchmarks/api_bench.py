@@ -1,0 +1,108 @@
+"""API-layer overhead benchmark (ISSUE 4 acceptance numbers).
+
+Measures what the declarative ``repro.api`` front door costs over the
+raw imperative idiom it replaced, on the fig7 quick suite (4 workloads ×
+the full fig7 policy batch, one trace shape).
+
+``ResultSet`` times every emitted jitted call (``rs.wall_s`` — the raw
+``simulate_sweep`` work, device sync included), so the api layer's own
+cost is measured WITHIN one run as
+
+    overhead_s = wall(Experiment.run()) - rs.wall_s
+
+i.e. plan compile + trace materialization + dispatch bookkeeping +
+result labeling. This within-run form is what the CI gate asserts
+(``overhead_pct`` < 5%): it is robust to noisy shared runners, where
+comparing two separate 15-second runs drifts by far more than 5% (the
+raw-vs-api pair is still reported as context, unguarded).
+
+Also records the plan metadata into the --json trajectory:
+``plan_calls`` (one jitted call per (trace-shape, engine) bucket, so
+this is also the bucket count) and ``plan_executables``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.engine_bench import block_tree
+from repro import api
+from repro.api import registry
+from repro.core.simulator import simulate_sweep
+
+
+def _raw_once(exp: api.Experiment) -> None:
+    """The seed-era hand-rolled equivalent of ``exp.run()``: per shape
+    bucket, stack every scenario's seed block and make one jitted call."""
+    plan = exp.compile()
+    for call in plan.calls:
+        parts = [s.materialize() for s in call.scenarios]
+        lines = np.concatenate([p["lines"] for p in parts])
+        pcs = np.concatenate([p["pcs"] for p in parts])
+        gap = np.concatenate([p["compute_gap"] for p in parts])
+        (_, n_warps, lanes) = call.shape
+        block_tree(simulate_sweep(lines, pcs, gap, exp.policies,
+                                  n_warps=n_warps, lanes=lanes,
+                                  prm=exp.prm, engine=call.engine,
+                                  wave_size=call.wave_size))
+
+
+def api_overhead(quick: bool = True, repeats: int = 2
+                 ) -> Tuple[List[dict], Dict]:
+    # quick is the gated configuration; the full suite is the same shape
+    # bucket with 15 scenarios instead of 4
+    exp = registry.PAPER_FIG7_QUICK if quick else registry.PAPER_FIG7
+
+    t0 = time.perf_counter()
+    plan = exp.compile()
+    plan_compile_us = (time.perf_counter() - t0) * 1e6
+
+    exp.run()                                   # warm the jit cache
+    best = None
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        rs = exp.run()
+        wall = time.perf_counter() - t0
+        if best is None or wall < best[0]:
+            best = (wall, rs)
+    api_warm_s, rs = best
+    sweep_warm_s = rs.wall_s                    # the raw jitted-call work
+    overhead_s = api_warm_s - sweep_warm_s
+    overhead_pct = overhead_s / sweep_warm_s * 100.0
+
+    # context only (not gated): the hand-rolled path, one warm run —
+    # subject to run-to-run machine noise
+    t0 = time.perf_counter()
+    _raw_once(exp)
+    raw_warm_s = time.perf_counter() - t0
+
+    rows = [{"path": "api Experiment.run", "scenarios": len(exp.scenarios),
+             "policies": len(exp.policies), "wall_s": round(api_warm_s, 4)},
+            {"path": "jitted calls within run",
+             "scenarios": len(exp.scenarios),
+             "policies": len(exp.policies),
+             "wall_s": round(sweep_warm_s, 4)},
+            {"path": "raw simulate_sweep (context)",
+             "scenarios": len(exp.scenarios),
+             "policies": len(exp.policies), "wall_s": round(raw_warm_s, 4)}]
+    for c in plan.calls:
+        i, w, l = c.shape
+        rows.append({"path": f"plan call [{c.engine}] I={i} W={w} L={l}",
+                     "scenarios": len(c.scenarios),
+                     "policies": len(exp.policies), "wall_s": ""})
+    derived = {
+        "experiment": exp.name,
+        "api_warm_s": round(api_warm_s, 4),
+        "sweep_warm_s": round(sweep_warm_s, 4),
+        "raw_warm_s": round(raw_warm_s, 4),
+        "overhead_s": round(overhead_s, 4),
+        "overhead_pct": round(overhead_pct, 3),
+        "plan_compile_us": round(plan_compile_us, 1),
+        # one jitted call per (trace-shape, engine) bucket by
+        # construction, so this is also the bucket count
+        "plan_calls": plan.n_calls,
+        "plan_executables": plan.n_executables,
+    }
+    return rows, derived

@@ -24,19 +24,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
+from repro.api.registry import STRESS_POLICIES
 from repro.core import baselines as BL
 from repro.core import tracegen as TG
-from repro.core import workloads as WL
 from repro.core.simulator import Policy, SimParams, simulate_sweep
 
 PRM = SimParams()
 
-# one policy per mechanism family — the stress-matrix comparison set
-STRESS_POLICIES: Tuple[Policy, ...] = (BL.BASELINE, BL.PCAL, BL.WBYP,
-                                       BL.MEDIC)
 
-
-def _block(tree):
+def block_tree(tree):
+    """Wait for every array in a jax pytree (shared benchmark helper)."""
     jax.tree.map(lambda x: x.block_until_ready(), tree)
 
 
@@ -53,63 +51,54 @@ def run_stress_matrix(policies: Sequence[Policy] = STRESS_POLICIES,
                       seed: int = 0, prm: SimParams = PRM
                       ) -> Tuple[Dict[str, dict], Dict[str, float],
                                  List[float]]:
-    """Run the stress scenario matrix on the wavefront engine.
+    """Run the stress scenario matrix on the wavefront engine, via the
+    declarative ``repro.api`` layer.
 
-    Scenarios are grouped by trace shape (I, W, L); each group rides the
-    seed axis of ONE jitted ``simulate_sweep(engine="wavefront")`` call,
-    so the whole matrix is one call per distinct shape. Returns
-    (per-scenario metrics with a leading policy axis, per-scenario wall
-    seconds — the wall of the scenario's whole GROUP call, compile
-    included, so same-shape scenarios share one number — and the list
-    of per-group walls whose sum is the matrix total).
+    The plan compiler buckets scenarios by trace shape (I, W, L); each
+    bucket rides the flat stacking axis of ONE jitted
+    ``simulate_sweep(engine="wavefront")`` call, so the whole matrix is
+    one call per distinct shape. Returns (per-scenario metrics with a
+    leading policy axis, per-scenario wall seconds — the wall of the
+    scenario's whole BUCKET call, compile included, so same-shape
+    scenarios share one number — and the list of per-bucket walls whose
+    sum is the matrix total).
     """
     specs = dict(specs or TG.STRESS_SPECS)
-    groups: Dict[tuple, List[str]] = {}
-    for name, spec in specs.items():
-        groups.setdefault(
-            (spec.n_instr, spec.n_warps, spec.lines_per_instr), []
-        ).append(name)
-
-    results: Dict[str, dict] = {}
-    walls: Dict[str, float] = {}
-    group_walls: List[float] = []
-    for (n_instr, n_warps, lanes), names in groups.items():
-        batch = TG.generate_batch([specs[n] for n in names], seeds=(seed,))
-        # [spec, seed=1, ...] -> ride the seed axis with the spec batch
-        lines = jnp.asarray(batch["lines"][:, 0])
-        pcs = jnp.asarray(batch["pcs"][:, 0])
-        gap = jnp.asarray(batch["compute_gap"][:, 0])
-        t0 = time.perf_counter()
-        out = simulate_sweep(lines, pcs, gap, policies, n_warps=n_warps,
-                             lanes=lanes, prm=prm, engine="wavefront")
-        _block(out)
-        wall = time.perf_counter() - t0
-        out = {k: np.asarray(v) for k, v in out.items()}   # [P, spec, ...]
-        group_walls.append(wall)
-        for si, name in enumerate(names):
-            results[name] = {k: v[:, si] for k, v in out.items()}
-            walls[name] = wall
-    return results, walls, group_walls
+    exp = api.Experiment(
+        "stress_matrix",
+        tuple(api.Scenario.from_spec(s, seeds=(seed,), name=n)
+              for n, s in specs.items()),
+        tuple(policies), engine="wavefront", prm=prm)
+    rs = exp.run()
+    results = {name: rs.get(scenario=name, seed=seed) for name in specs}
+    walls = {name: rs.wall_of(name) for name in specs}
+    return results, walls, list(rs.call_walls())
 
 
 def _timed_sweep(args, policies, **kw) -> float:
     """Warm wall-clock of one sweep: compile + first run, then time the
     second (warm runs are the meaningful timing on jitted paths)."""
-    _block(simulate_sweep(*args, policies, **kw))
+    block_tree(simulate_sweep(*args, policies, **kw))
     t0 = time.perf_counter()
-    _block(simulate_sweep(*args, policies, **kw))
+    block_tree(simulate_sweep(*args, policies, **kw))
     return time.perf_counter() - t0
 
 
 def engine_scale(quick: bool = False) -> Tuple[List[dict], Dict]:
+    """Engine A/B timings. Traces come from ``api.Scenario`` and the
+    matrix goes through ``api.Experiment``; only the warm per-engine
+    timing pairs call the ``simulate_sweep`` facade directly — they time
+    the engine itself, and the api layer's own dispatch overhead is
+    measured separately (benchmarks/api_bench.py)."""
     rows: List[dict] = []
     derived: Dict[str, object] = {}
 
     # ---- paper scale: 48 warps, 4 policies, warm ---------------------------
-    spec = WL.WORKLOADS["BFS"]
-    tr = WL.generate(spec, seed=0)
-    args = _sweep_args(tr)
-    kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM)
+    scen = api.Scenario.workload("BFS")
+    tr = scen.materialize()
+    args = _sweep_args(tr, idx=0)
+    (_, n_warps, lanes) = scen.shape
+    kw = dict(n_warps=n_warps, lanes=lanes, prm=PRM)
     t_ev = _timed_sweep(args, STRESS_POLICIES,
                         engine="event", **kw)
     t_wf = _timed_sweep(args, STRESS_POLICIES,
@@ -133,11 +122,11 @@ def engine_scale(quick: bool = False) -> Tuple[List[dict], Dict]:
     # Measured warm floors on the narrow SSE2-only reference container:
     # 4.9x at HAMMER2K, 7.4x at HAMMER4K (DESIGN.md §9); vectorized CPUs
     # amortize the wavefront's wide ops further.
-    sspec = TG.STRESS_SPECS["HAMMER2K"]
-    st = TG.generate(sspec, 0)
-    sargs = _sweep_args(st)
-    skw = dict(n_warps=sspec.n_warps, lanes=sspec.lines_per_instr,
-               prm=PRM)
+    sscen = api.Scenario.stress("HAMMER2K")
+    st = sscen.materialize()
+    sargs = _sweep_args(st, idx=0)
+    (_, s_warps, s_lanes) = sscen.shape
+    skw = dict(n_warps=s_warps, lanes=s_lanes, prm=PRM)
     ev2k = _timed_sweep(sargs, (BL.MEDIC,),
                         engine="event", **skw)
     wf2k = _timed_sweep(sargs, (BL.MEDIC,),
@@ -151,8 +140,8 @@ def engine_scale(quick: bool = False) -> Tuple[List[dict], Dict]:
 
     # ---- HAMMER2K × 4 policies alone: the ISSUE's <60s budget point --------
     t0 = time.perf_counter()
-    _block(simulate_sweep(*sargs, STRESS_POLICIES, engine="wavefront",
-                          **skw))
+    block_tree(simulate_sweep(*sargs, STRESS_POLICIES, engine="wavefront",
+                              **skw))
     h2k4 = time.perf_counter() - t0
     rows.append({"scale": "HAMMER2K 4-policy cold", "engine": "wavefront",
                  "policies": len(STRESS_POLICIES),

@@ -2,36 +2,45 @@
 simulator, plus the altitude-B serving A/B and kernel micro-benchmarks.
 
 Each function returns (rows, derived) where rows are CSV-able dicts.
+
+All simulation goes through the declarative ``repro.api`` layer
+(DESIGN.md §10): one single-scenario ``Experiment`` per (workload, seed
+block, engine) — which the plan compiler lowers to exactly the
+seed-stacked ``simulate_sweep`` call the seed-era code made by hand, so
+the golden fig7 numbers are byte-identical — with results read back by
+label through ``ResultSet`` instead of positional indexing.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
+from repro.api.registry import FIG7_SWEEP_POLICIES as SWEEP_POLICIES
 from repro.core import baselines as BL
-from repro.core import tracegen as TG
 from repro.core import workloads as WL
-from repro.core.simulator import Policy, SimParams, simulate, simulate_sweep
+from repro.core.simulator import Policy, SimParams
 
 PRM = SimParams()
 
-# Every policy any figure needs — including the Rand(ideal) probe points —
-# runs in ONE vmapped, jitted `simulate_sweep` call per workload. The
-# branchless policy engine makes the whole batch share a single trace.
-SWEEP_POLICIES: Tuple[Policy, ...] = tuple(BL.ALL_NAMED) + (
-    BL.rand(0.25), BL.rand(0.5), BL.rand(0.75))
-
-# default seed block swept TOGETHER with the policy batch: traces come
-# seed-stacked from `tracegen.generate_batch`, so one jitted
-# `simulate_sweep` call per workload covers policies x seeds.
+# default seed block swept TOGETHER with the policy batch: the scenario
+# carries the whole block, so one jitted `simulate_sweep` call per
+# workload covers policies x seeds.
 FIG_SEEDS: Tuple[int, ...] = (0,)
 
 _CACHE: Dict[Tuple[str, Tuple[int, ...], str],
              Dict[int, Dict[str, dict]]] = {}
+
+
+def _result_dict(rs: api.ResultSet, workload: str, pol_name: str,
+                 seed: int) -> dict:
+    """One policy's metrics + the trace + the whole-sweep wall, in the
+    dict shape the figure functions consume."""
+    d = dict(rs.get(scenario=workload, policy=pol_name, seed=seed))
+    d["sweep_wall_s"] = rs.wall_s     # wall time of the WHOLE sweep
+    d["trace"] = rs.trace(workload, seed)
+    return d
 
 
 def _sweep(workload: str, seed: int = 0,
@@ -43,31 +52,14 @@ def _sweep(workload: str, seed: int = 0,
         seeds = FIG_SEEDS if seed in FIG_SEEDS else (seed,)
     key = (workload, seeds, engine)
     if key not in _CACHE:
-        spec = TG.TraceSpec.from_workload(WL.WORKLOADS[workload])
-        tr = TG.generate_batch([spec], seeds)
-        t0 = time.perf_counter()
-        out = simulate_sweep(
-            jnp.asarray(tr["lines"][0]), jnp.asarray(tr["pcs"][0]),
-            jnp.asarray(tr["compute_gap"][0]), SWEEP_POLICIES,
-            n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM,
-            engine=engine)
-        out = {k: np.asarray(v) for k, v in out.items()}   # [P, S, ...]
-        wall = time.perf_counter() - t0
-        by_seed: Dict[int, Dict[str, dict]] = {}
-        for si, s in enumerate(seeds):
-            per: Dict[str, dict] = {}
-            for i, pol in enumerate(SWEEP_POLICIES):
-                d = {k: v[i, si] for k, v in out.items()}
-                d["sweep_wall_s"] = wall  # wall time of the WHOLE sweep
-                d["trace"] = {
-                    "lines": tr["lines"][0, si],
-                    "pcs": tr["pcs"][0, si],
-                    "compute_gap": tr["compute_gap"][0, si],
-                    "archetype": tr["archetype"][0, si],
-                }
-                per[pol.name] = d
-            by_seed[s] = per
-        _CACHE[key] = by_seed
+        exp = api.Experiment(f"fig:{workload}",
+                             (api.Scenario.workload(workload, seeds=seeds),),
+                             SWEEP_POLICIES, engine=engine, prm=PRM)
+        rs = exp.run(keep_traces=True)
+        _CACHE[key] = {
+            s: {pol.name: _result_dict(rs, workload, pol.name, s)
+                for pol in SWEEP_POLICIES}
+            for s in seeds}
     return _CACHE[key][seed]
 
 
@@ -79,21 +71,17 @@ def _run(workload: str, pol: Policy, seed: int = 0,
          seeds: Tuple[int, ...] = None, engine: str = "event") -> dict:
     if _BY_NAME.get(pol.name) == pol:
         return _sweep(workload, seed, seeds, engine)[pol.name]
-    # off-sweep policy (e.g. BL.RAND_SWEEP points): one-off run — still no
-    # retrace, since the policy enters `simulate` as a traced pytree
+    # off-sweep policy (e.g. BL.RAND_SWEEP points): a one-policy
+    # experiment — still no retrace, since the policy enters the jitted
+    # computation as a traced pytree
     key = (workload, pol, seed, engine)
     if key not in _OFF_SWEEP_CACHE:
-        spec = WL.WORKLOADS[workload]
-        tr = WL.generate(spec, seed=seed)
-        t0 = time.perf_counter()
-        out = simulate(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
-                       jnp.asarray(tr["compute_gap"]), n_warps=spec.n_warps,
-                       lanes=spec.lines_per_instr, prm=PRM, pol=pol,
-                       engine=engine)
-        out = {k: np.asarray(v) for k, v in out.items()}
-        out["sweep_wall_s"] = time.perf_counter() - t0   # sweep of one
-        out["trace"] = tr
-        _OFF_SWEEP_CACHE[key] = out
+        exp = api.Experiment(
+            f"fig:{workload}:{pol.name}",
+            (api.Scenario.workload(workload, seeds=(seed,)),),
+            (pol,), engine=engine, prm=PRM)
+        rs = exp.run(keep_traces=True)
+        _OFF_SWEEP_CACHE[key] = _result_dict(rs, workload, pol.name, seed)
     return _OFF_SWEEP_CACHE[key]
 
 

@@ -57,8 +57,8 @@ def main() -> None:
         if probe_created:
             os.remove(args.json)
 
-    from benchmarks import (engine_bench, kernel_micro, paper_figures,
-                            serving_ab, tracegen_bench)
+    from benchmarks import (api_bench, engine_bench, kernel_micro,
+                            paper_figures, serving_ab, tracegen_bench)
     from repro.core import workloads as WL
 
     wls = ("BFS", "SSSP", "BP", "CONS") if args.quick else WL.WORKLOAD_NAMES
@@ -72,6 +72,10 @@ def main() -> None:
         "tracegen_scale": lambda: tracegen_bench.tracegen_scale(
             loop_sample=1 if args.quick else 3),
         "engine_scale": lambda: engine_bench.engine_scale(quick=args.quick),
+        # api-layer overhead is always measured on the quick suite (the
+        # gated configuration); the full fig7 suite is the same single
+        # shape bucket with more scenarios
+        "api_overhead": lambda: api_bench.api_overhead(quick=True),
         "serving_ab": serving_ab.serving_ab,
         "kernel_micro": kernel_micro.kernel_micro,
     }

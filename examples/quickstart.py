@@ -1,47 +1,49 @@
 """Quickstart: the MeDiC policy core in 60 seconds.
 
 Runs one memory-intensive workload through the altitude-A simulator under
-the baseline and full-MeDiC policies — both in a single vmapped
-`simulate_sweep` call (the branchless policy engine compiles once for any
-set of policies) — and prints the headline effects the paper predicts:
-bypass volume, queue-delay relief, warp-type conversion, and speedup.
+the baseline and full-MeDiC policies via the declarative experiment API —
+a `Scenario` names what to simulate, an `Experiment` crosses it with
+policies, and the plan compiler lowers the whole thing to a single
+vmapped, jitted `simulate_sweep` call — then prints the headline effects
+the paper predicts straight off the labeled `ResultSet`: bypass volume,
+queue-delay relief, warp-type conversion, and speedup.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import baselines as BL
 from repro.core import warp_types as WT
-from repro.core import workloads as WL
-from repro.core.simulator import SimParams, simulate_sweep
 
 
 def main():
-    spec = WL.WORKLOADS["BFS"]
-    trace = WL.generate(spec, seed=0)
-    args = (jnp.asarray(trace["lines"]), jnp.asarray(trace["pcs"]),
-            jnp.asarray(trace["compute_gap"]))
-    kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr,
-              prm=SimParams())
+    exp = api.Experiment("quickstart",
+                         scenarios=(api.Scenario.workload("BFS"),),
+                         policies=(BL.BASELINE, BL.MEDIC))
+    print(exp.compile().describe())
+    rs = exp.run()
 
-    sweep = simulate_sweep(*args, [BL.BASELINE, BL.MEDIC], **kw)
-    base = {k: v[0] for k, v in sweep.items()}
-    medic = {k: v[1] for k, v in sweep.items()}
-
-    print(f"workload: {spec.name} ({spec.n_warps} warps, "
+    spec = exp.scenarios[0].trace_spec
+    print(f"\nworkload: {spec.name} ({spec.n_warps} warps, "
           f"{spec.n_instr} memory instructions each)")
-    for name, out in (("baseline", base), ("MeDiC", medic)):
-        types = np.bincount(np.asarray(out["warp_type"]),
-                            minlength=WT.NUM_TYPES)
-        print(f"\n[{name}]")
-        print(f"  IPC proxy          : {float(out['ipc']):.4f}")
-        print(f"  L2 miss rate       : {float(out['miss_rate']):.3f}")
-        print(f"  mean L2 queue delay: {float(out['mean_qdelay']):.1f} cyc")
-        print(f"  bypassed requests  : {int(out['bypasses'])}")
+
+    # the per-policy table, by label — no positional v[0]/v[1] slicing
+    for row in rs.to_rows(metrics=("ipc", "miss_rate", "mean_qdelay",
+                                   "bypasses")):
+        types = np.bincount(
+            np.asarray(rs.get(policy=row["policy"])["warp_type"]),
+            minlength=WT.NUM_TYPES)
+        print(f"\n[{row['policy']}]")
+        print(f"  IPC proxy          : {row['ipc']:.4f}")
+        print(f"  L2 miss rate       : {row['miss_rate']:.3f}")
+        print(f"  mean L2 queue delay: {row['mean_qdelay']:.1f} cyc")
+        print(f"  bypassed requests  : {int(row['bypasses'])}")
         print("  warp types         : " + ", ".join(
             f"{n}={c}" for n, c in zip(WT.TYPE_NAMES, types)))
-    print(f"\nMeDiC speedup: {float(medic['ipc'])/float(base['ipc']):.3f}x")
+
+    speedup = rs.speedup_over("Baseline")["BFS"]["MeDiC"]
+    print(f"\nMeDiC speedup: {speedup:.3f}x")
 
 
 if __name__ == "__main__":

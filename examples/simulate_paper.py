@@ -14,6 +14,12 @@ engine (same orderings within the documented tolerance, DESIGN.md §9).
 ``--stress`` runs the STRESS_SPECS scheduler-stress matrix (1k–4k warps)
 on the wavefront engine — the only path that can — and prints the
 per-scenario policy rankings.
+
+Everything routes through the declarative ``repro.api`` layer
+(DESIGN.md §10): the fig7 table via ``benchmarks.paper_figures`` (one
+single-scenario ``Experiment`` per workload, golden-pinned), the stress
+matrix via ``benchmarks.engine_bench.run_stress_matrix`` (one
+``Experiment`` whose plan compiles to one jitted call per trace shape).
 """
 import argparse
 import os
@@ -40,7 +46,8 @@ def run_stress():
         print(f"  {name:10s} [{spec.n_warps:4d} warps, "
               f"group wall {walls[name]:6.1f}s]  {ranking}")
     print(f"total wall: {sum(group_walls):.1f}s "
-          f"({len(group_walls)} jitted sweep calls, one per trace shape)")
+          f"({len(group_walls)} jitted sweep calls, one per trace-shape "
+          "bucket of the compiled plan)")
 
 
 def main():

@@ -1,0 +1,184 @@
+"""Experiment: scenarios × policies × engine, compiled to a minimal Plan.
+
+The declarative front door (DESIGN.md §10):
+
+    exp  = Experiment("fig7", scenarios, policies, engine="event")
+    plan = exp.compile()     # inspectable, no traces materialized yet
+    rs   = plan.execute()    # == exp.run()
+
+The **plan compiler** buckets scenarios by trace shape (I, W, L): every
+scenario in a bucket rides the seed-stack axis of ONE jitted
+``simulate_sweep`` call (policies vmapped on the leading axis), so the
+whole experiment runs in exactly one call per (shape, engine) bucket —
+the invariant the seed-era callers each re-implemented by hand.
+Executables are further shared ACROSS buckets (and across experiments)
+whenever the jit compile key — (shape, flat batch size, policy count,
+engine, wave_size, SimParams) — agrees, because ``simulate_sweep``'s
+underlying jit cache is keyed on exactly those; the plan reports that
+via ``n_executables``.
+
+A single-scenario experiment lowers to the identical call the seed-era
+positional idiom made (same trace arrays, same stacking), which is what
+keeps the golden fig7 suite byte-identical through the migration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.results import ResultBlock, ResultSet
+from repro.api.scenario import Scenario, Shape
+from repro.core.engine import (SimParams, simulate_sweep,
+                               validate_engine_args)
+from repro.policy import Policy
+
+_TRACE_KEYS = ("lines", "pcs", "compute_gap", "archetype")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCall:
+    """One emitted ``simulate_sweep`` call: a (shape, engine) bucket."""
+    shape: Shape                       # (n_instr, n_warps, lines_per_instr)
+    engine: str
+    wave_size: Optional[int]
+    scenarios: Tuple[Scenario, ...]    # seed blocks stack in this order
+
+    @property
+    def flat(self) -> int:
+        """Stacked trace count of the call (sum of scenario seed counts)."""
+        return sum(s.n_seeds for s in self.scenarios)
+
+    def compile_key(self, n_policies: int, prm: SimParams) -> tuple:
+        """Everything ``simulate_sweep``'s jit cache keys on: two calls
+        with equal keys share one compiled executable."""
+        return (self.shape, self.flat, n_policies, self.engine,
+                self.wave_size, prm)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Compiled experiment: the minimal list of jitted calls to make."""
+    experiment: "Experiment"
+    calls: Tuple[PlanCall, ...]
+
+    @property
+    def n_calls(self) -> int:
+        """Jitted calls to make — one per (trace-shape, engine) bucket,
+        so this IS the bucket count."""
+        return len(self.calls)
+
+    @property
+    def n_executables(self) -> int:
+        """Distinct jit compile keys — calls beyond this reuse an
+        executable compiled for an earlier bucket."""
+        exp = self.experiment
+        return len({c.compile_key(len(exp.policies), exp.prm)
+                    for c in self.calls})
+
+    def describe(self) -> str:
+        exp = self.experiment
+        lines = [f"plan[{exp.name}]: {len(exp.scenarios)} scenarios x "
+                 f"{len(exp.policies)} policies -> {self.n_calls} call(s), "
+                 f"{self.n_executables} executable(s)"]
+        for c in self.calls:
+            i, w, l = c.shape
+            lines.append(
+                f"  [{c.engine}] shape I={i} W={w} L={l} flat={c.flat}: "
+                + ", ".join(f"{s.name}x{s.n_seeds}" for s in c.scenarios))
+        return "\n".join(lines)
+
+    def execute(self, keep_traces: bool = False) -> ResultSet:
+        """Materialize traces and run every planned call."""
+        exp = self.experiment
+        blocks: List[ResultBlock] = []
+        for call in self.calls:
+            n_instr, n_warps, lanes = call.shape
+            parts = [s.materialize() for s in call.scenarios]
+            tr = {k: np.concatenate([p[k] for p in parts])
+                  for k in _TRACE_KEYS}
+            t0 = time.perf_counter()
+            out = simulate_sweep(
+                np.asarray(tr["lines"]), np.asarray(tr["pcs"]),
+                np.asarray(tr["compute_gap"]), exp.policies,
+                n_warps=n_warps, lanes=lanes, prm=exp.prm,
+                engine=call.engine, wave_size=call.wave_size)
+            out = {k: np.asarray(v) for k, v in out.items()}  # [P, F, ...]
+            wall = time.perf_counter() - t0
+            entries = tuple((s.name, seed) for s in call.scenarios
+                            for seed in s.seeds)
+            traces = None
+            if keep_traces:
+                traces = tuple(
+                    {k: tr[k][f] for k in _TRACE_KEYS}
+                    for f in range(call.flat))
+            blocks.append(ResultBlock(entries, out, wall, traces))
+        meta = {"experiment": exp.name, "engine": exp.engine,
+                "n_calls": self.n_calls,
+                "n_executables": self.n_executables}
+        return ResultSet([p.name for p in exp.policies], blocks, meta)
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """Scenarios × policies × engine options — the one front door.
+
+    ``run()`` compiles the plan and executes it; ``compile()`` exposes
+    the plan for inspection (bucketing, call count, executable reuse)
+    without materializing any traces.
+    """
+    name: str
+    scenarios: Tuple[Scenario, ...]
+    policies: Tuple[Policy, ...]
+    engine: str = "event"
+    wave_size: Optional[int] = None
+    prm: SimParams = SimParams()
+
+    def __post_init__(self):
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "policies", tuple(self.policies))
+        if not self.scenarios:
+            raise ValueError(f"experiment {self.name!r}: needs >= 1 "
+                             "scenario")
+        if not self.policies:
+            raise ValueError(f"experiment {self.name!r}: needs >= 1 policy")
+        names = [s.name for s in self.scenarios]
+        dupes = {n for n in names if names.count(n) > 1}
+        if dupes:
+            raise ValueError(f"experiment {self.name!r}: duplicate scenario "
+                             f"names {sorted(dupes)} — results would "
+                             "collide; pass name= to disambiguate")
+        pnames = [p.name for p in self.policies]
+        pdupes = {n for n in pnames if pnames.count(n) > 1}
+        if pdupes:
+            raise ValueError(f"experiment {self.name!r}: duplicate policy "
+                             f"names {sorted(pdupes)}")
+        validate_engine_args(self.engine, self.wave_size)
+
+    def compile(self) -> Plan:
+        """Bucket scenarios by trace shape; one PlanCall per bucket."""
+        buckets: Dict[Shape, List[Scenario]] = {}
+        for s in self.scenarios:
+            buckets.setdefault(s.shape, []).append(s)
+        calls = tuple(
+            PlanCall(shape, self.engine, self.wave_size, tuple(scens))
+            for shape, scens in buckets.items())
+        return Plan(self, calls)
+
+    def run(self, keep_traces: bool = False) -> ResultSet:
+        return self.compile().execute(keep_traces=keep_traces)
+
+    # convenience for quick derivative experiments
+    def with_(self, **changes) -> "Experiment":
+        return dataclasses.replace(self, **changes)
+
+
+def run(scenarios: Sequence[Scenario], policies: Sequence[Policy],
+        engine: str = "event", wave_size: Optional[int] = None,
+        prm: SimParams = SimParams(), name: str = "adhoc",
+        keep_traces: bool = False) -> ResultSet:
+    """One-shot helper: ``api.run(scenarios, policies)`` -> ResultSet."""
+    return Experiment(name, tuple(scenarios), tuple(policies), engine,
+                      wave_size, prm).run(keep_traces=keep_traces)

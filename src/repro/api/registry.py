@@ -1,0 +1,75 @@
+"""Named experiment registry: the paper's evaluation as data.
+
+The whole evaluation is two lines:
+
+    from repro import api
+    rows = api.registry.PAPER_FIG7.run().to_rows()
+
+Following the tensor2tensor ``Problem``/registry idiom, experiments are
+registered under string names (``api.registry.get("paper_fig7")``) so
+harnesses select them by flag, and exposed as module constants for
+direct import.
+
+``FIG7_SWEEP_POLICIES`` is the canonical fig7 policy batch — every named
+baseline plus the Rand(p) probe points the Rand(ideal) column derives
+from — kept here so ``benchmarks/paper_figures.py`` and ad-hoc callers
+share one definition.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.api.experiment import Experiment
+from repro.api.scenario import Scenario
+from repro.core import baselines as BL
+from repro.core import tracegen as TG
+from repro.core import workloads as WL
+from repro.policy import Policy
+
+#: every policy any paper figure needs, in one vmapped batch
+FIG7_SWEEP_POLICIES: Tuple[Policy, ...] = tuple(BL.ALL_NAMED) + (
+    BL.rand(0.25), BL.rand(0.5), BL.rand(0.75))
+
+#: the stress-matrix comparison set — one policy per mechanism family
+STRESS_POLICIES: Tuple[Policy, ...] = (BL.BASELINE, BL.PCAL, BL.WBYP,
+                                       BL.MEDIC)
+
+QUICK_WORKLOADS: Tuple[str, ...] = ("BFS", "SSSP", "BP", "CONS")
+
+
+def paper_fig7(workloads=WL.WORKLOAD_NAMES, seeds=(0,),
+               engine: str = "event", name: str = "paper_fig7"
+               ) -> Experiment:
+    """The Fig 7 evaluation: workloads × (baselines + Rand probes).
+    All 48-warp workloads share one trace shape, so the plan compiles
+    to a single jitted call per engine."""
+    return Experiment(
+        name,
+        tuple(Scenario.workload(w, seeds=seeds) for w in workloads),
+        FIG7_SWEEP_POLICIES, engine=engine)
+
+
+def stress(scenarios=tuple(TG.STRESS_SPECS), seeds=(0,),
+           name: str = "stress") -> Experiment:
+    """The 1k–4k-warp scheduler-stress matrix on the wavefront engine
+    (the only engine that completes it) — one jitted call per distinct
+    trace shape."""
+    return Experiment(
+        name,
+        tuple(Scenario.stress(s, seeds=seeds) for s in scenarios),
+        STRESS_POLICIES, engine="wavefront")
+
+
+PAPER_FIG7 = paper_fig7()
+PAPER_FIG7_QUICK = paper_fig7(QUICK_WORKLOADS, name="paper_fig7_quick")
+STRESS = stress()
+
+EXPERIMENTS: Dict[str, Experiment] = {
+    e.name: e for e in (PAPER_FIG7, PAPER_FIG7_QUICK, STRESS)}
+
+
+def get(name: str) -> Experiment:
+    if name not in EXPERIMENTS:
+        raise KeyError(f"unknown experiment {name!r}; registered: "
+                       f"{sorted(EXPERIMENTS)}")
+    return EXPERIMENTS[name]

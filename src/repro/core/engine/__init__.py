@@ -31,12 +31,34 @@ from repro.policy import Policy, stack_policies, to_arrays
 ENGINES = ("event", "wavefront")
 
 
+def validate_engine_args(engine: str, wave_size: Optional[int] = None) -> None:
+    """Front-door validation shared by ``simulate``/``simulate_sweep`` and
+    the declarative ``repro.api`` layer.
+
+    Raises ``ValueError`` for an unknown engine, and — instead of silently
+    ignoring it — for a ``wave_size`` passed to any engine that does not
+    consume one (only ``"wavefront"`` does).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    if wave_size is not None:
+        if engine != "wavefront":
+            raise ValueError(
+                f"wave_size={wave_size!r} is only meaningful with "
+                f"engine='wavefront'; engine={engine!r} would silently "
+                f"ignore it")
+        if wave_size != int(wave_size):
+            raise ValueError(
+                f"wave_size must be an integer, got {wave_size!r}")
+        if wave_size < 1:
+            raise ValueError(f"wave_size must be >= 1, got {wave_size!r}")
+
+
 def _core(engine: str, wave_size: Optional[int]):
+    validate_engine_args(engine, wave_size)
     if engine == "event":
         return _event.simulate_core
-    if engine == "wavefront":
-        return partial(_wavefront.simulate_core, wave_size=wave_size)
-    raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    return partial(_wavefront.simulate_core, wave_size=wave_size)
 
 
 @partial(jax.jit,
@@ -86,8 +108,7 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
     trace_lines: i32[I, W, L]; trace_pcs: i32[I, W].
     Returns metrics dict (all jnp arrays).
     """
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    validate_engine_args(engine, wave_size)
     return _simulate_one(trace_lines, trace_pcs, compute_gap,
                          to_arrays(pol), n_warps=n_warps, lanes=lanes,
                          prm=prm, engine=engine, wave_size=wave_size)
@@ -106,8 +127,7 @@ def simulate_sweep(trace_lines, trace_pcs, compute_gap,
     Metrics match per-policy `simulate` calls bit-for-bit on either
     engine (the parity is enforced by tests/test_policy_engine.py).
     """
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    validate_engine_args(engine, wave_size)
     pa = stack_policies(policies)
     return _simulate_batch(trace_lines, trace_pcs, compute_gap, pa,
                            n_warps=n_warps, lanes=lanes, prm=prm,
@@ -116,5 +136,5 @@ def simulate_sweep(trace_lines, trace_pcs, compute_gap,
 
 __all__ = [
     "ENGINES", "N_QBINS", "SimParams", "SimState", "init_state",
-    "simulate", "simulate_sweep",
+    "simulate", "simulate_sweep", "validate_engine_args",
 ]

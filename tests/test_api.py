@@ -1,0 +1,290 @@
+"""Declarative experiment API (repro.api): plan compiler, ResultSet,
+facade parity, and the engine front-door validation (ISSUE 4).
+
+Covers the acceptance criteria:
+  * the plan compiler emits <= one jitted call per (trace-shape, engine)
+    bucket — asserted both on the compiled plan and on the ACTUAL number
+    of dispatches (counter) and jit-cache entries (trace counter);
+  * label selection round-trips (to_rows / sel / get / to_json);
+  * Experiment output equals hand-rolled ``simulate_sweep`` output
+    exactly, on 3 workloads x both engines;
+  * ``wave_size`` with a non-wavefront engine raises, and the ENGINES
+    membership error goes through the same front door.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import registry
+from repro.core import baselines as BL
+from repro.core import engine as ENG
+from repro.core.simulator import SimParams, simulate, simulate_sweep
+
+PRM = SimParams()
+POLICIES = (BL.BASELINE, BL.MEDIC)
+WORKLOADS3 = ("BFS", "BP", "CONS")
+
+
+def _exp(workloads=WORKLOADS3, policies=POLICIES, engine="event", **kw):
+    return api.Experiment(
+        f"t:{engine}:{'-'.join(workloads)}",
+        tuple(api.Scenario.workload(w) for w in workloads),
+        policies, engine=engine, **kw)
+
+
+# ---------------------------------------------------------------------------
+# plan compiler
+# ---------------------------------------------------------------------------
+
+def test_same_shape_scenarios_compile_to_one_call():
+    plan = _exp().compile()
+    assert plan.n_calls == 1
+    assert plan.n_executables == 1
+    assert plan.calls[0].flat == 3
+    assert tuple(s.name for s in plan.calls[0].scenarios) == WORKLOADS3
+
+
+def test_mixed_shapes_bucket_per_shape():
+    scens = (api.Scenario.workload("BFS"),
+             api.Scenario.workload("BP"),
+             api.Scenario.workload("BFS", n_warps=96, name="BFS96"),
+             api.Scenario.workload("BP", n_warps=96, name="BP96"))
+    plan = api.Experiment("t:mixed", scens, POLICIES).compile()
+    assert plan.n_calls == 2
+    shapes = {c.shape for c in plan.calls}
+    assert shapes == {(64, 48, 16), (64, 96, 16)}
+    # every scenario appears exactly once across calls
+    names = [s.name for c in plan.calls for s in c.scenarios]
+    assert sorted(names) == sorted(s.name for s in scens)
+
+
+def test_plan_executes_one_dispatch_per_bucket(monkeypatch):
+    """The ACTUAL dispatch count equals the plan's call count, and the
+    underlying jit cache grows by at most one trace per bucket."""
+    import repro.api.experiment as EXP
+
+    calls = []
+    real = EXP.simulate_sweep
+
+    def counting(*a, **kw):
+        calls.append(kw.get("engine", "event"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(EXP, "simulate_sweep", counting)
+    exp = _exp()                       # 3 same-shape scenarios
+    cache_before = ENG._simulate_batch._cache_size()
+    rs = exp.run()
+    assert len(calls) == exp.compile().n_calls == 1
+    # one bucket -> at most one new compiled executable
+    assert ENG._simulate_batch._cache_size() - cache_before <= 1
+    # a second run re-dispatches but compiles nothing new
+    cache_warm = ENG._simulate_batch._cache_size()
+    exp.run()
+    assert ENG._simulate_batch._cache_size() == cache_warm
+    assert len(calls) == 2
+    assert rs.meta["n_calls"] == 1
+
+
+def test_registry_plans_are_minimal():
+    assert registry.PAPER_FIG7.compile().n_calls == 1      # one 48-warp shape
+    assert len(registry.PAPER_FIG7.scenarios) == 15
+    stress_plan = registry.STRESS.compile()
+    assert stress_plan.n_calls == 3                        # 1k / 2k / 4k warps
+    assert {c.engine for c in stress_plan.calls} == {"wavefront"}
+    assert registry.get("paper_fig7") is registry.PAPER_FIG7
+    with pytest.raises(KeyError):
+        registry.get("nope")
+
+
+# ---------------------------------------------------------------------------
+# facade parity: Experiment == hand-rolled simulate_sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ("event", "wavefront"))
+def test_experiment_equals_handrolled_sweep(engine):
+    """3 workloads x 2 engines: the api's one bucketed call returns
+    exactly what hand-rolling the same stacked ``simulate_sweep`` call
+    returns — no approximation enters through the api layer."""
+    exp = _exp(engine=engine)
+    rs = exp.run()
+
+    parts = [s.materialize() for s in exp.scenarios]
+    lines = np.concatenate([p["lines"] for p in parts])
+    pcs = np.concatenate([p["pcs"] for p in parts])
+    gap = np.concatenate([p["compute_gap"] for p in parts])
+    hand = simulate_sweep(jnp.asarray(lines), jnp.asarray(pcs),
+                          jnp.asarray(gap), POLICIES, n_warps=48, lanes=16,
+                          prm=PRM, engine=engine)
+    hand = {k: np.asarray(v) for k, v in hand.items()}     # [P, F, ...]
+
+    for fi, wl in enumerate(WORKLOADS3):
+        for pi, pol in enumerate(POLICIES):
+            got = rs.get(scenario=wl, policy=pol.name, seed=0)
+            assert set(got) == set(hand)
+            for k in hand:
+                np.testing.assert_array_equal(
+                    got[k], hand[k][pi, fi], err_msg=f"{wl}/{pol.name}/{k}")
+
+
+def test_single_scenario_matches_simulate():
+    """A 1-scenario, 1-policy experiment equals the plain ``simulate``
+    facade (which the policy-engine suite pins against the sweep)."""
+    exp = api.Experiment("t:one", (api.Scenario.workload("SSSP"),),
+                         (BL.MEDIC,))
+    rs = exp.run()
+    tr = exp.scenarios[0].materialize()
+    ref = simulate(jnp.asarray(tr["lines"][0]), jnp.asarray(tr["pcs"][0]),
+                   jnp.asarray(tr["compute_gap"][0]), n_warps=48, lanes=16,
+                   prm=PRM, pol=BL.MEDIC)
+    got = rs.get(policy="MeDiC")
+    for k, v in ref.items():
+        np.testing.assert_array_equal(got[k], np.asarray(v), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# ResultSet labeling
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rset():
+    exp = api.Experiment(
+        "t:labels",
+        (api.Scenario.workload("BFS", seeds=(0, 1)),
+         api.Scenario.workload("BP")),
+        POLICIES)
+    return exp.run(keep_traces=True)
+
+
+def test_resultset_axes(rset):
+    assert rset.policies == ("Baseline", "MeDiC")
+    assert rset.scenarios == ("BFS", "BP")
+    assert rset.seeds("BFS") == (0, 1)
+    assert rset.seeds("BP") == (0,)
+    assert "ipc" in rset.scalar_metrics()
+    assert "warp_hit_ratio" in rset.metrics
+    assert "warp_hit_ratio" not in rset.scalar_metrics()
+
+
+def test_to_rows_round_trips(rset):
+    rows = rset.to_rows()
+    # one row per (scenario, policy, seed): (2 seeds + 1 seed) x 2 policies
+    assert len(rows) == 6
+    keys = {(r["scenario"], r["policy"], r["seed"]) for r in rows}
+    assert len(keys) == 6
+    for r in rows:
+        assert r["ipc"] == rset.value("ipc", r["scenario"], r["policy"],
+                                      r["seed"])
+
+
+def test_sel_restricts_and_chains(rset):
+    medic = rset.sel(policy="MeDiC")
+    assert medic.policies == ("MeDiC",)
+    assert len(medic.to_rows()) == 3
+    one = medic.sel(scenario="BP")
+    # fully pinned: get() needs no arguments
+    assert float(one.get()["ipc"]) == rset.value("ipc", "BP", "MeDiC", 0)
+    with pytest.raises(KeyError):
+        rset.sel(policy="NoSuch")
+    with pytest.raises(KeyError):
+        rset.sel(scenario="NoSuch")
+    with pytest.raises(KeyError):
+        rset.sel(seed=3)
+    with pytest.raises(KeyError):
+        rset.get(scenario="BFS", policy="MeDiC")   # seed ambiguous
+
+
+def test_speedup_over(rset):
+    sp = rset.speedup_over("Baseline")
+    assert sp["BFS"]["Baseline"] == pytest.approx(1.0)
+    assert sp["BFS"]["MeDiC"] > 1.0
+    per_seed = rset.speedup_over("Baseline", reduce=None)
+    assert len(per_seed["BFS"]["MeDiC"]) == 2
+    assert sp["BFS"]["MeDiC"] == pytest.approx(
+        np.mean(per_seed["BFS"]["MeDiC"]))
+
+
+def test_to_json_and_traces(rset):
+    doc = json.loads(rset.to_json())
+    assert doc["policies"] == ["Baseline", "MeDiC"]
+    assert len(doc["rows"]) == 6
+    assert doc["meta"]["n_calls"] == 1
+    tr = rset.trace("BFS", 1)
+    assert tr["lines"].shape == (64, 48, 16)
+    # traces are the scenario's own materialization, by seed
+    np.testing.assert_array_equal(
+        tr["lines"], api.Scenario.workload("BFS", seeds=(0, 1))
+        .materialize()["lines"][1])
+    rs2 = api.Experiment("t:notrace", (api.Scenario.workload("BP"),),
+                         (BL.BASELINE,)).run()
+    with pytest.raises(ValueError):
+        rs2.trace("BP", 0)
+
+
+# ---------------------------------------------------------------------------
+# validation (satellite): one shared front door
+# ---------------------------------------------------------------------------
+
+def test_wave_size_with_event_engine_raises():
+    scen = api.Scenario.workload("BFS")
+    tr = scen.materialize()
+    args = (jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+            jnp.asarray(tr["compute_gap"]))
+    with pytest.raises(ValueError, match="wave_size"):
+        simulate_sweep(*args, POLICIES, n_warps=48, lanes=16, prm=PRM,
+                       engine="event", wave_size=8)
+    with pytest.raises(ValueError, match="wave_size"):
+        simulate(jnp.asarray(tr["lines"][0]), jnp.asarray(tr["pcs"][0]),
+                 jnp.asarray(tr["compute_gap"][0]), n_warps=48, lanes=16,
+                 prm=PRM, pol=BL.MEDIC, engine="event", wave_size=8)
+    with pytest.raises(ValueError, match="wave_size"):
+        api.Experiment("t:bad", (scen,), POLICIES, engine="event",
+                       wave_size=8)
+    with pytest.raises(ValueError, match="wave_size"):
+        ENG.validate_engine_args("wavefront", wave_size=0)
+    with pytest.raises(ValueError, match="integer"):
+        ENG.validate_engine_args("wavefront", wave_size=2.5)
+
+
+def test_unknown_engine_routes_through_front_door():
+    scen = api.Scenario.workload("BFS")
+    tr = scen.materialize()
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate_sweep(jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+                       jnp.asarray(tr["compute_gap"]), POLICIES,
+                       n_warps=48, lanes=16, prm=PRM, engine="warp9")
+    with pytest.raises(ValueError, match="unknown engine"):
+        api.Experiment("t:bad2", (scen,), POLICIES, engine="warp9")
+
+
+def test_experiment_validation():
+    scen = api.Scenario.workload("BFS")
+    with pytest.raises(ValueError, match="scenario"):
+        api.Experiment("t:empty", (), POLICIES)
+    with pytest.raises(ValueError, match="policy"):
+        api.Experiment("t:nopol", (scen,), ())
+    with pytest.raises(ValueError, match="duplicate scenario"):
+        api.Experiment("t:dup", (scen, api.Scenario.workload("BFS")),
+                       POLICIES)
+    with pytest.raises(ValueError, match="duplicate policy"):
+        api.Experiment("t:duppol", (scen,), (BL.MEDIC, BL.MEDIC))
+    with pytest.raises(ValueError, match="seed"):
+        api.Scenario.workload("BFS", seeds=())
+    with pytest.raises(ValueError, match="duplicate seeds"):
+        api.Scenario.workload("BFS", seeds=(0, 0))
+    with pytest.raises(ValueError, match="unknown workload"):
+        api.Scenario.workload("NOPE")
+    with pytest.raises(ValueError, match="unknown stress"):
+        api.Scenario.stress("NOPE")
+
+
+def test_scenario_hashable_and_overrides():
+    a = api.Scenario.workload("BFS")
+    b = api.Scenario.workload("BFS")
+    assert a == b and hash(a) == hash(b)
+    big = api.Scenario.workload("BFS", n_warps=128, name="BFS128")
+    assert big.shape == (64, 128, 16)
+    assert big.trace_spec.n_warps == 128
+    assert {a, b, big} == {a, big}

@@ -58,7 +58,8 @@ def main() -> None:
             os.remove(args.json)
 
     from benchmarks import (api_bench, engine_bench, kernel_micro,
-                            paper_figures, serving_ab, tracegen_bench)
+                            paper_figures, phased_bench, serving_ab,
+                            tracegen_bench)
     from repro.core import workloads as WL
 
     wls = ("BFS", "SSSP", "BP", "CONS") if args.quick else WL.WORKLOAD_NAMES
@@ -76,6 +77,10 @@ def main() -> None:
         # gated configuration); the full fig7 suite is the same single
         # shape bucket with more scenarios
         "api_overhead": lambda: api_bench.api_overhead(quick=True),
+        # reclassification-lag vs oblivious-static-label IPC gap on the
+        # drifting-regime PHASED_* specs (quick: 48+256 warps; full adds
+        # the 1k/2k sizes)
+        "phased_gap": lambda: phased_bench.phased_gap(quick=args.quick),
         "serving_ab": serving_ab.serving_ab,
         "kernel_micro": kernel_micro.kernel_micro,
     }

@@ -35,7 +35,7 @@ from repro.core.engine import (SimParams, simulate_sweep,
                                validate_engine_args)
 from repro.policy import Policy
 
-_TRACE_KEYS = ("lines", "pcs", "compute_gap", "archetype")
+_TRACE_KEYS = ("lines", "pcs", "compute_gap", "archetype", "oracle_wtype")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +97,15 @@ class Plan:
         for call in self.calls:
             n_instr, n_warps, lanes = call.shape
             parts = [s.materialize() for s in call.scenarios]
+            # a bucket may mix constant-intensity scenarios (scalar gap
+            # per seed, [S]) with phased ones ([S, I]): broadcast the
+            # scalars so the stacked axis is uniform
+            if any(p["compute_gap"].ndim == 2 for p in parts):
+                for p in parts:
+                    g = p["compute_gap"]
+                    if g.ndim == 1:
+                        p["compute_gap"] = np.broadcast_to(
+                            g[:, None], (g.shape[0], n_instr))
             tr = {k: np.concatenate([p[k] for p in parts])
                   for k in _TRACE_KEYS}
             t0 = time.perf_counter()
@@ -104,7 +113,8 @@ class Plan:
                 np.asarray(tr["lines"]), np.asarray(tr["pcs"]),
                 np.asarray(tr["compute_gap"]), exp.policies,
                 n_warps=n_warps, lanes=lanes, prm=exp.prm,
-                engine=call.engine, wave_size=call.wave_size)
+                engine=call.engine, wave_size=call.wave_size,
+                oracle_types=np.asarray(tr["oracle_wtype"]))
             out = {k: np.asarray(v) for k, v in out.items()}  # [P, F, ...]
             wall = time.perf_counter() - t0
             entries = tuple((s.name, seed) for s in call.scenarios

@@ -34,7 +34,14 @@ FIG7_SWEEP_POLICIES: Tuple[Policy, ...] = tuple(BL.ALL_NAMED) + (
 STRESS_POLICIES: Tuple[Policy, ...] = (BL.BASELINE, BL.PCAL, BL.WBYP,
                                        BL.MEDIC)
 
+#: the phased-family labeling ladder: Baseline, then MeDiC with frozen
+#: phase-0 labels (stale) / the paper's periodic reclassification
+#: (online) / ground-truth per-phase labels (oracle) — one vmapped batch,
+#: so the reclassification-lag IPC gap comes out of a single jitted call
+PHASED_POLICIES: Tuple[Policy, ...] = BL.LABELING_LADDER
+
 QUICK_WORKLOADS: Tuple[str, ...] = ("BFS", "SSSP", "BP", "CONS")
+QUICK_PHASED: Tuple[str, ...] = ("PHASED48", "PHASED256")
 
 
 def paper_fig7(workloads=WL.WORKLOAD_NAMES, seeds=(0,),
@@ -60,12 +67,28 @@ def stress(scenarios=tuple(TG.STRESS_SPECS), seeds=(0,),
         STRESS_POLICIES, engine="wavefront")
 
 
+def phased(scenarios=tuple(TG.PHASED_SPECS), seeds=(0,),
+           engine: str = "wavefront", name: str = "paper_phased"
+           ) -> Experiment:
+    """The drifting-regime suite: PHASED_* scenarios × the labeling
+    ladder (stale / online / oracle MeDiC + Baseline). Runs on either
+    engine (``.with_(engine=...)``); the wavefront default is what
+    completes the 1k–2k-warp sizes."""
+    return Experiment(
+        name,
+        tuple(Scenario.phased(s, seeds=seeds) for s in scenarios),
+        PHASED_POLICIES, engine=engine)
+
+
 PAPER_FIG7 = paper_fig7()
 PAPER_FIG7_QUICK = paper_fig7(QUICK_WORKLOADS, name="paper_fig7_quick")
 STRESS = stress()
+PAPER_PHASED = phased()
+PAPER_PHASED_QUICK = phased(QUICK_PHASED, name="paper_phased_quick")
 
 EXPERIMENTS: Dict[str, Experiment] = {
-    e.name: e for e in (PAPER_FIG7, PAPER_FIG7_QUICK, STRESS)}
+    e.name: e for e in (PAPER_FIG7, PAPER_FIG7_QUICK, STRESS,
+                        PAPER_PHASED, PAPER_PHASED_QUICK)}
 
 
 def get(name: str) -> Experiment:

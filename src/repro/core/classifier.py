@@ -6,6 +6,17 @@ boundary the warp's type is re-evaluated from the observed hit ratio and the
 counters reset. Between boundaries the warp keeps its last classification
 (paper observation O2: divergence behaviour is stable over long periods).
 
+The sampling/reclassification window is a first-class knob (ISSUE 5):
+``sampling_interval`` may be a *traced* value (the policy layer supplies a
+per-policy window via ``PolicyArrays.reclass_interval``), and
+``max_windows`` caps how many sampling windows are allowed to update the
+label — ``max_windows=1`` is the "stale phase-0 labeling" baseline that
+classifies each warp once and then freezes, the foil the phased scenario
+family measures online reclassification against. The window bookkeeping
+follows the EAF generation-bump idiom: ``windows`` counts completed
+windows per warp and label updates are gated on it, instead of keeping a
+separate frozen-label array.
+
 Bypassed requests are counted as *misses* (they would have been: the warp
 was classified mostly/all-miss). To let a reformed warp escape the bypass
 class, a small fraction of bypassed requests is still probed through the
@@ -30,6 +41,7 @@ class ClassifierState(NamedTuple):
     accesses: jnp.ndarray    # i32[W] accesses in current sampling window
     warp_type: jnp.ndarray   # i32[W] current classification
     ratio: jnp.ndarray       # f32[W] last sampled hit ratio
+    windows: jnp.ndarray     # i32[W] completed sampling windows
 
 
 def init(n_warps: int) -> ClassifierState:
@@ -38,18 +50,23 @@ def init(n_warps: int) -> ClassifierState:
         accesses=jnp.zeros((n_warps,), jnp.int32),
         warp_type=jnp.full((n_warps,), WT.BALANCED, jnp.int32),
         ratio=jnp.full((n_warps,), 0.5, jnp.float32),
+        windows=jnp.zeros((n_warps,), jnp.int32),
     )
 
 
 def observe(state: ClassifierState, warp_id, is_hit, *,
-            sampling_interval: int = 256,
+            sampling_interval=256,
             mostly_hit_threshold: float = 0.8,
             mostly_miss_threshold: float = 0.2,
-            weight=None) -> ClassifierState:
+            weight=None, max_windows=None) -> ClassifierState:
     """Record one (or a batch of) access outcome(s) and re-classify any warp
     whose sampling window filled up.
 
     warp_id: i32[] or i32[N]; is_hit: bool same shape.
+    sampling_interval may be a traced scalar (policy-visible window).
+    max_windows (optional, traced ok): label updates stop after this many
+    completed windows — the window still resets (counters keep cycling,
+    ``ratio`` telemetry stays live), only ``warp_type`` freezes.
     """
     warp_id = jnp.atleast_1d(warp_id)
     is_hit = jnp.atleast_1d(is_hit).astype(jnp.int32)
@@ -63,11 +80,14 @@ def observe(state: ClassifierState, warp_id, is_hit, *,
     new_type = WT.classify(ratio_now, accesses,
                            mostly_hit_threshold=mostly_hit_threshold,
                            mostly_miss_threshold=mostly_miss_threshold)
-    warp_type = jnp.where(due, new_type, state.warp_type)
+    relabel = due if max_windows is None \
+        else due & (state.windows < max_windows)
+    warp_type = jnp.where(relabel, new_type, state.warp_type)
     ratio = jnp.where(due, ratio_now, state.ratio)
+    windows = state.windows + due.astype(jnp.int32)
     hits = jnp.where(due, 0, hits)
     accesses = jnp.where(due, 0, accesses)
-    return ClassifierState(hits, accesses, warp_type, ratio)
+    return ClassifierState(hits, accesses, warp_type, ratio, windows)
 
 
 def force_classify(state: ClassifierState, *, mostly_hit_threshold=0.8,
@@ -83,4 +103,5 @@ def force_classify(state: ClassifierState, *, mostly_hit_threshold=0.8,
     return ClassifierState(
         state.hits, state.accesses,
         jnp.where(keep, state.warp_type, new_type),
-        jnp.where(keep, state.ratio, ratio_now))
+        jnp.where(keep, state.ratio, ratio_now),
+        state.windows)

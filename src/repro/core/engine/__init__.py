@@ -21,6 +21,7 @@ from functools import partial
 from typing import Any, Dict, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.engine import event as _event
 from repro.core.engine import wavefront as _wavefront
@@ -61,36 +62,54 @@ def _core(engine: str, wave_size: Optional[int]):
     return partial(_wavefront.simulate_core, wave_size=wave_size)
 
 
+def _oracle_or_zeros(oracle_types, trace_lines, policies):
+    """Resolve the ground-truth label input. A policy with
+    labeling="oracle" READS these labels, so omitting them there is a
+    caller error (zeros would silently label every warp all-miss);
+    otherwise the labels are never read and a zero placeholder keeps the
+    jit signature uniform. Shape follows the trace minus lanes."""
+    if oracle_types is not None:
+        return oracle_types
+    needs = [p.name for p in policies if p.labeling == "oracle"]
+    if needs:
+        raise ValueError(
+            f"policies {needs} use labeling='oracle' but no oracle_types "
+            "were passed; supply the trace's 'oracle_wtype' array "
+            "(repro.core.tracegen emits it for every spec)")
+    return jnp.zeros(trace_lines.shape[:-1], jnp.int32)
+
+
 @partial(jax.jit,
          static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size"))
-def _simulate_one(trace_lines, trace_pcs, compute_gap, pa, *, n_warps: int,
-                  lanes: int, prm: SimParams, engine: str = "event",
+def _simulate_one(trace_lines, trace_pcs, compute_gap, oracle_types, pa, *,
+                  n_warps: int, lanes: int, prm: SimParams,
+                  engine: str = "event",
                   wave_size: Optional[int] = None) -> Dict[str, Any]:
     core = _core(engine, wave_size)
-    return core(trace_lines, trace_pcs, compute_gap, pa,
+    return core(trace_lines, trace_pcs, compute_gap, oracle_types, pa,
                 n_warps=n_warps, lanes=lanes, prm=prm)
 
 
 @partial(jax.jit,
          static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size"))
-def _simulate_batch(trace_lines, trace_pcs, compute_gap, pa_batch, *,
-                    n_warps: int, lanes: int, prm: SimParams,
+def _simulate_batch(trace_lines, trace_pcs, compute_gap, oracle_types,
+                    pa_batch, *, n_warps: int, lanes: int, prm: SimParams,
                     engine: str = "event",
                     wave_size: Optional[int] = None):
     one = partial(_core(engine, wave_size), n_warps=n_warps, lanes=lanes,
                   prm=prm)
     if trace_lines.ndim == 4:      # seed-stacked traces [S, I, W, L]
-        over_seeds = jax.vmap(one, in_axes=(0, 0, 0, None))
-        return jax.vmap(over_seeds, in_axes=(None, None, None, 0))(
-            trace_lines, trace_pcs, compute_gap, pa_batch)
-    return jax.vmap(one, in_axes=(None, None, None, 0))(
-        trace_lines, trace_pcs, compute_gap, pa_batch)
+        over_seeds = jax.vmap(one, in_axes=(0, 0, 0, 0, None))
+        return jax.vmap(over_seeds, in_axes=(None, None, None, None, 0))(
+            trace_lines, trace_pcs, compute_gap, oracle_types, pa_batch)
+    return jax.vmap(one, in_axes=(None, None, None, None, 0))(
+        trace_lines, trace_pcs, compute_gap, oracle_types, pa_batch)
 
 
 def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
              lanes: int, prm: SimParams, pol: Policy,
-             engine: str = "event",
-             wave_size: Optional[int] = None) -> Dict[str, Any]:
+             engine: str = "event", wave_size: Optional[int] = None,
+             oracle_types=None) -> Dict[str, Any]:
     """Run one workload under one policy.
 
     ``engine="event"`` (default) is the exact discrete-event reference:
@@ -105,11 +124,16 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
     The policy enters as a traced `PolicyArrays`, so every `Policy` preset
     reuses the same compiled executable for a given workload shape.
 
-    trace_lines: i32[I, W, L]; trace_pcs: i32[I, W].
+    trace_lines: i32[I, W, L]; trace_pcs: i32[I, W]; compute_gap: f32
+    scalar or f32[I] (phased per-instruction intensity); oracle_types:
+    optional i32[I, W] ground-truth labels — required (pass the trace's
+    ``oracle_wtype``) when the policy's labeling mode is "oracle".
     Returns metrics dict (all jnp arrays).
     """
     validate_engine_args(engine, wave_size)
     return _simulate_one(trace_lines, trace_pcs, compute_gap,
+                         _oracle_or_zeros(oracle_types, trace_lines,
+                                          (pol,)),
                          to_arrays(pol), n_warps=n_warps, lanes=lanes,
                          prm=prm, engine=engine, wave_size=wave_size)
 
@@ -117,20 +141,29 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
 def simulate_sweep(trace_lines, trace_pcs, compute_gap,
                    policies: Sequence[Policy], *, n_warps: int, lanes: int,
                    prm: SimParams, engine: str = "event",
-                   wave_size: Optional[int] = None) -> Dict[str, Any]:
+                   wave_size: Optional[int] = None,
+                   oracle_types=None) -> Dict[str, Any]:
     """Run a whole policy sweep in ONE jitted, vmapped call.
 
     trace_lines may be [I, W, L] (one workload instance — outputs get a
     leading policy axis P) or seed-stacked [S, I, W, L] (outputs get
-    leading axes [P, S]); trace_pcs/compute_gap follow suit.
+    leading axes [P, S]); trace_pcs/compute_gap/oracle_types follow suit
+    (compute_gap gains a trailing [I] axis for phased specs whose
+    schedule varies intensity).
+
+    ``oracle_types`` (i32[(S,) I, W], the trace's ``oracle_wtype``) is
+    only read by policies with labeling="oracle" — passing it lets one
+    vmapped sweep compare oracle / online / stale labelings.
 
     Metrics match per-policy `simulate` calls bit-for-bit on either
     engine (the parity is enforced by tests/test_policy_engine.py).
     """
     validate_engine_args(engine, wave_size)
     pa = stack_policies(policies)
-    return _simulate_batch(trace_lines, trace_pcs, compute_gap, pa,
-                           n_warps=n_warps, lanes=lanes, prm=prm,
+    return _simulate_batch(trace_lines, trace_pcs, compute_gap,
+                           _oracle_or_zeros(oracle_types, trace_lines,
+                                            policies),
+                           pa, n_warps=n_warps, lanes=lanes, prm=prm,
                            engine=engine, wave_size=wave_size)
 
 

@@ -27,12 +27,12 @@ I32 = jnp.int32
 def _request_step(st: SimState, req, prm: SimParams, pa: PolicyArrays,
                   tokens) -> tuple:
     """Service ONE request against the full state, chronologically exact."""
-    t_arr, w, addr, pc, valid = req
+    t_arr, w, addr, pc, valid, owt = req
     m = st.metrics
 
-    # ---- ② bypass decision (branchless, repro.policy) ----------------------
+    # ---- ①② label select + bypass decision (branchless, repro.policy) ------
     byp, wtype, pidx = REQ.bypass_decision(st, w, addr, pc, valid, prm, pa,
-                                           tokens)
+                                           tokens, owt)
     use_l2 = valid & ~byp
 
     # ---- L2 bank queue (O3) ------------------------------------------------
@@ -102,11 +102,14 @@ def _request_step(st: SimState, req, prm: SimParams, pa: PolicyArrays,
     t_done = jnp.where(valid, t_done, t_arr)
 
     # ---- ① classifier + PC table + lifetime counters ------------------------
+    # sampling window and label-freeze cap are policy-visible knobs
     clf = CLF.observe(st.clf, w, hit,
-                      sampling_interval=prm.sampling_interval,
+                      sampling_interval=POL.reclass_interval(
+                          pa, prm.sampling_interval),
                       mostly_hit_threshold=prm.mostly_hit_threshold,
                       mostly_miss_threshold=prm.mostly_miss_threshold,
-                      weight=jnp.atleast_1d(valid.astype(I32)))
+                      weight=jnp.atleast_1d(valid.astype(I32)),
+                      max_windows=POL.reclass_max_windows(pa))
     pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
     pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
     tot_hits = st.tot_hits.at[w].add(hit.astype(I32))
@@ -134,16 +137,21 @@ def _request_step(st: SimState, req, prm: SimParams, pa: PolicyArrays,
     return new_st, t_done
 
 
-def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
-                  *, n_warps: int, lanes: int,
+def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
+                  pa: PolicyArrays, *, n_warps: int, lanes: int,
                   prm: SimParams) -> Dict[str, Any]:
-    """One workload × one policy. `pa` is a traced pytree — vmappable."""
+    """One workload × one policy. `pa` is a traced pytree — vmappable.
+
+    ``compute_gap`` is a scalar or f32[I] (phased per-instruction
+    intensity); ``oracle_types`` is i32[I, W] ground-truth labels (only
+    read by policies whose labeling mode is "oracle")."""
     n_instr = trace_lines.shape[0]
     tokens = POL.pcal_tokens(pa, n_warps)
 
     # [W, I, ...] layout for per-warp program counters
     lines_wi = jnp.swapaxes(trace_lines, 0, 1)
     pcs_wi = jnp.swapaxes(trace_pcs, 0, 1)
+    oracle_wi = jnp.swapaxes(oracle_types, 0, 1)
 
     st0 = init_state(n_warps, prm)
     ready0 = jnp.zeros((n_warps,), F32)
@@ -165,7 +173,8 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
             return _request_step(s, r, prm, pa, tokens)
 
         reqs = (t_arr, jnp.full((lanes,), w, I32), lines,
-                jnp.full((lanes,), pc, I32), valid)
+                jnp.full((lanes,), pc, I32), valid,
+                jnp.full((lanes,), oracle_wi[w, i], I32))
         st, dones = jax.lax.scan(body, st, reqs)
         dmax = jnp.max(jnp.where(valid, dones, -jnp.inf))
         dmin = jnp.min(jnp.where(valid, dones, jnp.inf))
@@ -174,8 +183,9 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
         metrics = dict(st.metrics)
         metrics["stall_cycles"] = metrics["stall_cycles"] + stall
         st = st._replace(metrics=metrics)
+        gap = compute_gap if jnp.ndim(compute_gap) == 0 else compute_gap[i]
         new_ready = ready.at[w].set(
-            jnp.where(has_req, dmax + compute_gap, t0 + compute_gap))
+            jnp.where(has_req, dmax + gap, t0 + gap))
         new_ptr = ptr.at[w].add(1)
         # snapshot for Fig 4: (warp, instr index, sampled ratio)
         snap = (w, i, st.clf.ratio[w])

@@ -55,13 +55,18 @@ def eaf_index(addr, prm: SimParams):
 # ---------------------------------------------------------------------------
 
 def bypass_decision(st: SimState, w, addr, pc, valid, prm: SimParams,
-                    pa: PolicyArrays, tokens):
+                    pa: PolicyArrays, tokens, oracle_wt):
     """Returns (byp, wtype, pidx) for one request or a wave of requests.
+
+    ``oracle_wt`` is the trace generator's ground-truth per-phase label
+    for the request's (instruction, warp); the policy's labeling mode
+    (①) selects between it and the online classifier's label, so one
+    vmapped sweep can compare oracle / online / stale labelings.
 
     Periodic probe so a reformed warp can be re-learned: every 8th access
     of a bypassing warp still takes the cache path.
     """
-    wtype = st.clf.warp_type[w]
+    wtype = POL.select_label(pa, st.clf.warp_type[w], oracle_wt)
     pidx = pc_index(pc, prm)
     probe = (st.clf.accesses[w] % 8) == 0
     rand_u = hash_index(addr, 7, 65536).astype(F32) / 65536.0
@@ -122,7 +127,11 @@ def finalize_outputs(st: SimState, ready, ratio_t, compute_gap, *,
     # System throughput in a steady state where finished warps' slots are
     # backfilled by fresh thread blocks (as on a real GPU): the sum of
     # per-warp progress rates. makespan-based IPC is also reported.
-    per_warp_time = jnp.maximum(ready - compute_gap, 1.0)
+    # compute_gap may be per-instruction (f32[I], phased intensity): each
+    # warp's ready time includes one trailing gap — the last
+    # instruction's.
+    last_gap = compute_gap if jnp.ndim(compute_gap) == 0 else compute_gap[-1]
+    per_warp_time = jnp.maximum(ready - last_gap, 1.0)
     ipc = jnp.sum(n_instr / per_warp_time)
     ipc_makespan = total_instr / jnp.maximum(makespan, 1.0)
     energy = (m["l2_accesses"] * prm.e_l2 + m["dram_accesses"] * prm.e_dram

@@ -78,7 +78,8 @@ def default_wave_size(n_warps: int) -> int:
 
 
 def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight,
-                      prm: SimParams) -> CLF.ClassifierState:
+                      prm: SimParams, pa: PolicyArrays
+                      ) -> CLF.ClassifierState:
     """``classifier.observe`` restricted to the B touched warps.
 
     Equivalent to the full-width observe — an untouched warp's counters
@@ -87,33 +88,40 @@ def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight,
     which is what keeps the cache pass O(B) at stress-scale warp counts.
     Wave warp ids are distinct, so the scatters don't collide. Parity
     with `CLF.observe` is pinned by tests/test_engine_differential.py.
+
+    The sampling window and label-freeze cap come from the policy
+    (①, same knobs the event engine passes to ``CLF.observe``).
     """
+    interval = POL.reclass_interval(pa, prm.sampling_interval)
+    max_windows = POL.reclass_max_windows(pa)
     hits = clf.hits[w] + is_hit.astype(I32) * weight
     accesses = clf.accesses[w] + weight
-    due = accesses >= prm.sampling_interval
+    due = accesses >= interval
     ratio_now = hits.astype(jnp.float32) / jnp.maximum(accesses, 1)
     new_type = WT.classify(ratio_now, accesses,
                            mostly_hit_threshold=prm.mostly_hit_threshold,
                            mostly_miss_threshold=prm.mostly_miss_threshold)
+    relabel = due & (clf.windows[w] < max_windows)
     return CLF.ClassifierState(
         hits=clf.hits.at[w].set(jnp.where(due, 0, hits)),
         accesses=clf.accesses.at[w].set(jnp.where(due, 0, accesses)),
         warp_type=clf.warp_type.at[w].set(
-            jnp.where(due, new_type, clf.warp_type[w])),
+            jnp.where(relabel, new_type, clf.warp_type[w])),
         ratio=clf.ratio.at[w].set(jnp.where(due, ratio_now, clf.ratio[w])),
+        windows=clf.windows.at[w].add(due.astype(I32)),
     )
 
 
-def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, prm: SimParams,
-                pa: PolicyArrays, tokens) -> tuple:
+def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, owt,
+                prm: SimParams, pa: PolicyArrays, tokens) -> tuple:
     """One lane sub-step of a wave: the timing-independent half of
     ``event._request_step`` for [B] requests (at most one per warp),
     slots in chronological order."""
     m = st.metrics
 
-    # ---- ② bypass decision (shared branchless math) ------------------------
+    # ---- ①② label select + bypass decision (shared branchless math) --------
     byp, wtype, pidx = REQ.bypass_decision(st, w, addr, pc, valid, prm, pa,
-                                           tokens)
+                                           tokens, owt)
     use_l2 = valid & ~byp
 
     # ---- L2 lookup (sub-step-start tags) -----------------------------------
@@ -158,7 +166,7 @@ def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, prm: SimParams,
     eaf_ctr = jnp.where(reset, 0, eaf_ctr)
 
     # ---- ① classifier + PC table + lifetime counters ------------------------
-    clf = _observe_gathered(st.clf, w, hit, valid.astype(I32), prm)
+    clf = _observe_gathered(st.clf, w, hit, valid.astype(I32), prm, pa)
     pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
     pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
     tot_hits = st.tot_hits.at[w].add(hit.astype(I32))
@@ -354,10 +362,14 @@ def _timing_pass(st: SimState, an: QueueAnchors, recs,
     return new_st, new_an, t_done_lb
 
 
-def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
-                  *, n_warps: int, lanes: int, prm: SimParams,
+def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
+                  pa: PolicyArrays, *, n_warps: int, lanes: int,
+                  prm: SimParams,
                   wave_size: Optional[int] = None) -> Dict[str, Any]:
-    """One workload × one policy on the wavefront engine. Vmappable."""
+    """One workload × one policy on the wavefront engine. Vmappable.
+
+    ``compute_gap`` is a scalar or f32[I]; ``oracle_types`` i32[I, W]
+    (same contract as ``event.simulate_core``)."""
     n_instr = trace_lines.shape[0]
     B = max(1, min(wave_size or default_wave_size(n_warps), n_warps))
     # phase 1 (>= B warps active) services B instructions per wave; once
@@ -368,6 +380,7 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
 
     lines_wi = jnp.swapaxes(trace_lines, 0, 1)      # [W, I, L]
     pcs_wi = jnp.swapaxes(trace_pcs, 0, 1)          # [W, I]
+    oracle_wi = jnp.swapaxes(oracle_types, 0, 1)    # [W, I]
 
     st0 = init_state(n_warps, prm)
     an0 = init_anchors(prm)
@@ -388,13 +401,14 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
         t0 = ready[w_sel]
         lines_b = lines_wi[w_sel, i_sel]             # [B, L]
         pc_b = pcs_wi[w_sel, i_sel]                  # [B]
+        owt_b = oracle_wi[w_sel, i_sel]              # [B]
 
         def lane_step(s, xs):
             lane, addr = xs                          # i32[], i32[B]
             valid = (addr >= 0) & slot_ok
             t_arr = t0 + lane.astype(F32) * prm.lane_skew
-            return _cache_pass(s, t_arr, w_sel, addr, pc_b, valid, prm,
-                               pa, tokens)
+            return _cache_pass(s, t_arr, w_sel, addr, pc_b, valid, owt_b,
+                               prm, pa, tokens)
 
         st, recs = jax.lax.scan(
             lane_step, st,
@@ -411,8 +425,10 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, pa: PolicyArrays,
         st = st._replace(metrics=metrics)
 
         w_ok = jnp.where(slot_ok, w_sel, n_warps)    # OOB -> dropped
+        gap = compute_gap if jnp.ndim(compute_gap) == 0 \
+            else compute_gap[i_sel]
         ready = ready.at[w_ok].set(
-            jnp.where(has_req, dmax + compute_gap, t0 + compute_gap),
+            jnp.where(has_req, dmax + gap, t0 + gap),
             mode="drop")
         ptr = ptr.at[w_ok].add(1, mode="drop")
         # Fig 4 snapshot: sampled ratio after each serviced instruction

@@ -23,12 +23,15 @@ See DESIGN.md §"Trace generation" for the lowering contract.
 """
 from repro.core.tracegen.ref import generate_ref
 from repro.core.tracegen.sampler import generate, generate_batch
-from repro.core.tracegen.spec import (ARCHETYPES, AddressLayout, TraceSpec,
-                                      WarpParams, lower, trace_key)
-from repro.core.tracegen.stress import STRESS_SPECS
+from repro.core.tracegen.spec import (ARCHETYPES, AddressLayout, Phase,
+                                      TraceSpec, WarpParams,
+                                      compile_schedule, lower, lowered_gap,
+                                      phase_of_instr, trace_key)
+from repro.core.tracegen.stress import PHASED_SPECS, STRESS_SPECS
 
 __all__ = [
-    "ARCHETYPES", "AddressLayout", "TraceSpec", "WarpParams", "lower",
+    "ARCHETYPES", "AddressLayout", "Phase", "TraceSpec", "WarpParams",
+    "compile_schedule", "lower", "lowered_gap", "phase_of_instr",
     "trace_key", "generate", "generate_batch", "generate_ref",
-    "STRESS_SPECS",
+    "PHASED_SPECS", "STRESS_SPECS",
 ]

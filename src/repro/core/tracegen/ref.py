@@ -5,9 +5,11 @@ Walks warps → instructions → lanes exactly like the original
 ``workloads.generate`` did, but draws every random value from the
 counter RNG at the cell's own (tag, index) coordinate, so it must agree
 with ``sampler.generate`` bit-for-bit (tests/test_tracegen.py runs the
-differential over every workload at 3 seeds). Scalar Python-int RNG
-mirrors (``rng.*_scalar``) keep the loop tolerably fast; their equality
-with the array versions is itself under test.
+differential over every workload at 3 seeds; the hypothesis fuzz in
+tests/test_tracegen_properties.py extends it over random phase
+schedules). Scalar Python-int RNG mirrors (``rng.*_scalar``) keep the
+loop tolerably fast; their equality with the array versions is itself
+under test.
 """
 from __future__ import annotations
 
@@ -15,8 +17,11 @@ from typing import Dict
 
 import numpy as np
 
+from repro.core import warp_types as WT
 from repro.core.tracegen import rng
-from repro.core.tracegen.spec import TraceSpec, make_layout, trace_key
+from repro.core.tracegen.spec import (TraceSpec, compile_schedule,
+                                      lowered_gap, make_layout,
+                                      phase_of_instr, trace_key)
 
 
 def generate_ref(spec: TraceSpec, seed: int = 0) -> Dict[str, np.ndarray]:
@@ -25,14 +30,19 @@ def generate_ref(spec: TraceSpec, seed: int = 0) -> Dict[str, np.ndarray]:
     tab = spec.archetype_table()
     n_arch = tab.shape[0]
     max_ws = max(int(tab[:, 0].max()), 1)
-    cum = np.cumsum(np.asarray(spec.mix, np.float64))
     i_n, w_n, l_n = spec.n_instr, spec.n_warps, spec.lines_per_instr
+    _, plans = compile_schedule(spec)
+    phase_of = phase_of_instr(spec)
+    n_ph = len(plans)
 
     root = trace_key(spec.name, seed)
     k_arch = rng.stream_key_scalar(root, rng.TAG_ARCH)
     k_phase = rng.stream_key_scalar(root, rng.TAG_PHASE)
     k_pick = rng.stream_key_scalar(root, rng.TAG_PHASE_PICK)
+    k_pmix = rng.stream_key_scalar(root, rng.TAG_PHASE_MIX)
     k_ws = rng.stream_key_scalar(root, rng.TAG_WS)
+    k_churn = rng.stream_key_scalar(root, rng.TAG_WS_CHURN)
+    k_wskey = rng.stream_key_scalar(root, rng.TAG_WS_KEY)
     k_pc = rng.stream_key_scalar(root, rng.TAG_PC)
     k_pool = rng.stream_key_scalar(root, rng.TAG_POOL)
     k_reuse = rng.stream_key_scalar(root, rng.TAG_REUSE_U)
@@ -45,30 +55,55 @@ def generate_ref(spec: TraceSpec, seed: int = 0) -> Dict[str, np.ndarray]:
 
     lines = np.full((i_n, w_n, l_n), -1, np.int32)
     pcs = np.zeros((i_n, w_n), np.int32)
-    arch1_out = np.zeros((w_n,), np.int32)
-    arch2_out = np.zeros((w_n,), np.int32)
-    half_at = i_n // 2
+    arch_phases = np.zeros((w_n, n_ph), np.int32)
+    oracle = np.zeros((i_n, w_n), np.int32)
+
+    def inv_cdf(cum, u):
+        return min(int(np.searchsorted(cum, u, side="right")), n_arch - 1)
 
     for wi in range(w_n):
-        u = rng.uniform_scalar(k_arch, wi)
-        arch1 = min(int(np.searchsorted(cum, u, side="right")), n_arch - 1)
-        arch2 = arch1
-        if spec.phase_shift:
-            if rng.uniform_scalar(k_phase, wi) < spec.phase_flip_prob:
-                arch2 = rng.randint_scalar(k_pick, wi, n_arch)
-        arch1_out[wi], arch2_out[wi] = arch1, arch2
+        # per-phase archetype / working-set-key chains, scalar mirror of
+        # spec.lower (counter RNG: draw order is irrelevant, only the
+        # (tag, index) coordinates must match)
+        archs = [inv_cdf(plans[0].cum, rng.uniform_scalar(k_arch, wi))]
+        wkeys = [rng.bits_scalar(k_ws, wi)]
+        for p, plan in enumerate(plans[1:], start=1):
+            if plan.legacy:
+                flip = rng.uniform_scalar(k_phase, wi) < plan.flip_prob
+                a = rng.randint_scalar(k_pick, wi, n_arch) if flip \
+                    else archs[-1]
+                archs.append(a)
+                wkeys.append(wkeys[-1])
+                continue
+            pidx = p * w_n + wi
+            flip = rng.uniform_scalar(k_phase, pidx) < plan.flip_prob
+            a = inv_cdf(plan.cum, rng.uniform_scalar(k_pmix, pidx)) \
+                if flip else archs[-1]
+            archs.append(a)
+            rekey = rng.uniform_scalar(k_churn, pidx) < plan.churn
+            wkeys.append(rng.bits_scalar(k_wskey, pidx) if rekey
+                         else wkeys[-1])
+        arch_phases[wi] = archs
 
-        wkey = rng.bits_scalar(k_ws, wi)
         ws_base = int(layout.ws_base(wi))
-        ws = [ws_base + rng.perm12_scalar(j, wkey) for j in range(max_ws)]
+        ws_by_key = {}
+        for key in wkeys:
+            if key not in ws_by_key:
+                ws_by_key[key] = [ws_base + rng.perm12_scalar(j, key)
+                                  for j in range(max_ws)]
         pcs_w = [rng.randint_scalar(k_pc, wi * spec.n_pcs + j, 1 << 16)
                  for j in range(spec.n_pcs)]
-        params = {a: (int(tab[a, 0]), float(tab[a, 1]), float(tab[a, 2]))
-                  for a in (arch1, arch2)}
+        params = [(int(tab[a, 0]), float(tab[a, 1]), float(tab[a, 2]))
+                  for a in archs]
+        oracle_w = [int(WT.oracle_type_np(tab[a, 1], tab[a, 0]))
+                    for a in archs]
 
         for ii in range(i_n):
-            ws_size, reuse, shared = params[arch1 if ii < half_at else arch2]
+            p = int(phase_of[ii])
+            ws_size, reuse, shared = params[p]
+            ws = ws_by_key[wkeys[p]]
             pcs[ii, wi] = pcs_w[ii % spec.n_pcs]
+            oracle[ii, wi] = oracle_w[p]
             for li in range(l_n):
                 flat = (ii * w_n + wi) * l_n + li
                 u = rng.uniform_scalar(k_reuse, flat)
@@ -86,7 +121,9 @@ def generate_ref(spec: TraceSpec, seed: int = 0) -> Dict[str, np.ndarray]:
     return {
         "lines": lines,
         "pcs": pcs,
-        "compute_gap": spec.compute_gap,
-        "archetype": arch1_out,
-        "archetype2": arch2_out,
+        "compute_gap": lowered_gap(spec),
+        "archetype": arch_phases[:, 0].copy(),
+        "archetype2": arch_phases[:, -1].copy(),
+        "oracle_wtype": oracle,
+        "archetype_phases": arch_phases,
     }

@@ -40,6 +40,12 @@ TAG_REUSE_U = 7     # per-cell reuse uniform
 TAG_SHARED_U = 8    # per-cell shared-pool uniform
 TAG_SHARED_IDX = 9  # per-cell shared-pool index
 TAG_WS_IDX = 10     # per-cell working-set index
+# phased-schedule tags (ISSUE 5): indexed at p*W + w so every phase of
+# every warp has its own coordinate; the legacy two-half path keeps its
+# original TAG_PHASE/TAG_PHASE_PICK draws at index w, byte-identical
+TAG_PHASE_MIX = 11  # per-(phase, warp) redrawn-archetype uniform
+TAG_WS_CHURN = 12   # per-(phase, warp) working-set churn uniform
+TAG_WS_KEY = 13     # per-(phase, warp) re-keyed working-set permutation
 
 _INV53 = float(2.0 ** -53)
 

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-from repro.core.tracegen.spec import TraceSpec
+from repro.core.tracegen.spec import Phase, TraceSpec
 
 _HAMMER_MIX: Tuple[float, ...] = (0.02, 0.08, 0.10, 0.45, 0.35)
 _PHASE_MIX: Tuple[float, ...] = (0.10, 0.25, 0.30, 0.25, 0.10)
@@ -41,3 +41,51 @@ STRESS_SPECS: Dict[str, TraceSpec] = {s.name: s for s in [
 ]}
 
 STRESS_NAMES = tuple(STRESS_SPECS)
+
+# ---------------------------------------------------------------------------
+# PHASED family (ISSUE 5): drifting-regime schedules for the online
+# warp-reclassification story. Unlike PHASE2K (whose warps flip once at
+# the midpoint), these specs swing the whole population's hit-ratio
+# structure through distinct regimes — hit-heavy -> mixed -> miss-heavy,
+# with working-set churn at the boundaries — so a phase-0 warp-type
+# label is WRONG for most of the run and the classifier's
+# reclassification window is what decides bypass/insertion/priority
+# quality. The drift runs TOWARD lower hit ratios on purpose: under
+# bypass policies the classifier can follow a warp down (bypassed
+# requests count as misses) but cannot follow it back up — the 1-in-8
+# probe caps a bypassing warp's observable window hit ratio at 0.125,
+# below the 0.2 mostly-miss threshold (the probe-ratchet, DESIGN.md
+# §11) — so recovery-shaped drift would confound the stale-vs-online
+# comparison the family exists to measure. Sized 48
+# (differential-testable on the event engine) up to 2k warps
+# (wavefront-only scale).
+# ---------------------------------------------------------------------------
+
+_HIT_HEAVY = (0.30, 0.45, 0.15, 0.07, 0.03)
+_MIXED = (0.10, 0.25, 0.30, 0.25, 0.10)
+_MISS_HEAVY = (0.03, 0.07, 0.15, 0.40, 0.35)
+
+#: hit-heavy warm-up, slide to a mixed regime with working-set churn,
+#: then a hard swing to miss-heavy at raised memory pressure — the
+#: canonical degrading 3-regime drift schedule used at every PHASED_*
+#: size
+_DRIFT_SCHEDULE = (
+    Phase(frac=1.0, mix=_HIT_HEAVY),
+    Phase(frac=1.0, mix=_MIXED, churn=0.5),
+    Phase(frac=1.0, mix=_MISS_HEAVY, churn=0.5, intensity=0.98),
+)
+
+
+def _phased(name: str, n_warps: int, intensity: float) -> TraceSpec:
+    return TraceSpec(name, mix=_MIXED, intensity=intensity,
+                     n_warps=n_warps, phases=_DRIFT_SCHEDULE)
+
+
+PHASED_SPECS: Dict[str, TraceSpec] = {s.name: s for s in [
+    _phased("PHASED48", 48, 0.95),
+    _phased("PHASED256", 256, 0.95),
+    _phased("PHASED1K", 1024, 0.92),
+    _phased("PHASED2K", 2048, 0.90),
+]}
+
+PHASED_NAMES = tuple(PHASED_SPECS)

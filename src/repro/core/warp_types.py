@@ -46,29 +46,49 @@ def classify(hit_ratio, accesses, *, mostly_hit_threshold: float = 0.8,
                      jnp.full_like(t, BALANCED))
 
 
+def _ladder_np(hit_ratio, mostly_hit_threshold: float,
+               mostly_miss_threshold: float) -> np.ndarray:
+    """The ratio->type threshold ladder, numpy-vectorized in float32 —
+    the single numpy-side source of the comparisons ``classify`` makes
+    (weakly typed python-float thresholds compare at the array dtype, so
+    the jnp and numpy forms agree bit-for-bit). ``classify_np`` and
+    ``oracle_type_np`` both call this, so the ladder cannot
+    desynchronize between them."""
+    r = np.asarray(hit_ratio, np.float32)
+    t = np.full(r.shape, BALANCED, np.int32)
+    t = np.where(r <= np.float32(mostly_miss_threshold), MOSTLY_MISS, t)
+    t = np.where(r <= np.float32(_EPS), ALL_MISS, t)
+    t = np.where(r >= np.float32(mostly_hit_threshold), MOSTLY_HIT, t)
+    t = np.where(r >= np.float32(1.0 - _EPS), ALL_HIT, t)
+    return t
+
+
 def classify_np(hit_ratio: float, accesses: int, *,
                 mostly_hit_threshold: float = 0.8,
                 mostly_miss_threshold: float = 0.2,
                 min_samples: int = 8) -> int:
-    """Scalar numpy mirror of `classify` for host-side control planes.
-
-    Comparisons happen in float32, exactly like the jnp version (weakly
-    typed python-float thresholds compare at the array dtype), so the two
-    agree bit-for-bit.
-    """
+    """Scalar numpy mirror of `classify` for host-side control planes."""
     if accesses < min_samples:
         return BALANCED
-    r = np.float32(hit_ratio)
-    t = BALANCED
-    if r <= np.float32(mostly_miss_threshold):
-        t = MOSTLY_MISS
-    if r <= np.float32(_EPS):
-        t = ALL_MISS
-    if r >= np.float32(mostly_hit_threshold):
-        t = MOSTLY_HIT
-    if r >= np.float32(1.0 - _EPS):
-        t = ALL_HIT
-    return t
+    return int(_ladder_np(hit_ratio, mostly_hit_threshold,
+                          mostly_miss_threshold))
+
+
+def oracle_type_np(reuse_p, ws_lines, *, mostly_hit_threshold: float = 0.8,
+                   mostly_miss_threshold: float = 0.2) -> np.ndarray:
+    """Vectorized numpy ground-truth labeling from lowered trace params.
+
+    The warp type a converged classifier would settle on, given the
+    phase's reuse probability (≈ the warp's steady-state hit ratio) and
+    working-set size (0 lines = pure streaming = all-miss regardless of
+    the nominal reuse column). Same float32 threshold semantics as
+    ``classify``/``classify_np`` (shared ``_ladder_np``); used by
+    tracegen to emit the per-phase oracle labels the engines' oracle
+    labeling mode consumes.
+    """
+    t = _ladder_np(reuse_p, mostly_hit_threshold, mostly_miss_threshold)
+    return np.where(np.asarray(ws_lines) == 0,
+                    np.int32(ALL_MISS), t).astype(np.int32)
 
 
 def is_bypass_type(warp_type):

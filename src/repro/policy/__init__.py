@@ -19,12 +19,13 @@ policy shares a single jit trace, and stacking policies along a leading
 axis turns a full policy sweep into one vmapped call
 (``core.simulator.simulate_sweep``).
 """
-from repro.policy.spec import (BYPASS_MECHS, INSERT_MECHS, Policy,
-                               PolicyArrays, stack_policies, to_arrays)
+from repro.policy.spec import (BYPASS_MECHS, INSERT_MECHS, LABEL_MECHS,
+                               Policy, PolicyArrays, stack_policies,
+                               to_arrays)
 from repro.policy.tables import DecisionTables
 from repro.policy import ops
 
 __all__ = [
-    "BYPASS_MECHS", "INSERT_MECHS", "Policy", "PolicyArrays",
-    "stack_policies", "to_arrays", "DecisionTables", "ops",
+    "BYPASS_MECHS", "INSERT_MECHS", "LABEL_MECHS", "Policy",
+    "PolicyArrays", "stack_policies", "to_arrays", "DecisionTables", "ops",
 ]

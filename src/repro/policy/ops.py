@@ -67,6 +67,37 @@ def is_high_priority(pa: PolicyArrays, wtype):
     return (pa.sched_medic > 0.5) & WT.is_priority_type(wtype)
 
 
+def select_label(pa: PolicyArrays, clf_wtype, oracle_wtype):
+    """① Which warp-type label drives decisions ②③④ for this request.
+
+    ``label_sel`` is one-hot over LABEL_MECHS = (online, stale, oracle);
+    online and stale both READ the classifier's label (stale differs in
+    how the label is *updated* — see ``reclass_max_windows``), oracle
+    substitutes the trace generator's ground-truth per-phase label.
+    """
+    return jnp.where(pa.label_sel[2] > 0.5, oracle_wtype, clf_wtype)
+
+
+def reclass_interval(pa: PolicyArrays, default):
+    """① Effective classifier sampling window (accesses) — the
+    policy-visible reclassification knob; 0 defers to the SimParams
+    default."""
+    return jnp.where(pa.reclass_interval > 0.5, pa.reclass_interval,
+                     jnp.asarray(default, F32))
+
+
+#: effectively-unbounded window count for the online labeling mode
+_NO_WINDOW_CAP = 1 << 30
+
+
+def reclass_max_windows(pa: PolicyArrays):
+    """① How many sampling windows may update a warp's label: 1 for the
+    stale (classify-once, phase-0) mode, unbounded otherwise. The window
+    machinery keeps cycling either way (EAF-style generation counting in
+    ``classifier.observe``) — only the label write is gated."""
+    return jnp.where(pa.label_sel[1] > 0.5, 1, _NO_WINDOW_CAP).astype(I32)
+
+
 def pcal_tokens(pa: PolicyArrays, n_warps: int):
     """PCAL token assignment: a pseudo-random but fixed subset of warps,
     blind to warp type (first-come/scheduler-order in the paper)."""

@@ -21,6 +21,7 @@ F32 = jnp.float32
 BYPASS_MECHS = ("none", "medic", "pcal", "pcbyp", "rand")   # ②
 INSERT_MECHS = ("lru", "medic", "eaf")                      # ③
 SCHED_MECHS = ("frfcfs", "medic")                           # ④
+LABEL_MECHS = ("online", "stale", "oracle")                 # ① labeling
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +33,14 @@ class Policy:
     scheduler: str = "frfcfs"  # frfcfs | medic
     rand_p: float = 0.5        # rand bypass probability
     pcal_frac: float = 0.375   # fraction of warps holding tokens
+    # ① how warp-type labels track drift (ISSUE 5):
+    #   online — periodic reclassification every sampling window (paper);
+    #   stale  — classify each warp once, then freeze (phase-0 labels);
+    #   oracle — ground-truth per-phase labels from the trace generator.
+    labeling: str = "online"
+    # sampling window in accesses; 0 = the SimParams default. A
+    # policy-visible knob so one vmapped sweep can compare windows.
+    reclass_interval: int = 0
 
     def __post_init__(self):
         if self.bypass not in BYPASS_MECHS:
@@ -40,6 +49,13 @@ class Policy:
             raise ValueError(f"unknown insertion mechanism {self.insertion!r}")
         if self.scheduler not in SCHED_MECHS:
             raise ValueError(f"unknown scheduler {self.scheduler!r}")
+        if self.labeling not in LABEL_MECHS:
+            raise ValueError(f"unknown labeling mechanism {self.labeling!r}")
+        if self.reclass_interval < 0 or \
+                self.reclass_interval != int(self.reclass_interval):
+            raise ValueError(
+                f"reclass_interval must be a non-negative int, got "
+                f"{self.reclass_interval!r}")
 
 
 class PolicyArrays(NamedTuple):
@@ -50,6 +66,8 @@ class PolicyArrays(NamedTuple):
     sched_medic: jnp.ndarray   # f32[]  1.0 iff scheduler == "medic"
     rand_p: jnp.ndarray        # f32[]
     pcal_frac: jnp.ndarray     # f32[]
+    label_sel: jnp.ndarray     # f32[3] one-hot over LABEL_MECHS
+    reclass_interval: jnp.ndarray  # f32[] 0 = SimParams default
 
 
 def _one_hot(index: int, n: int) -> jnp.ndarray:
@@ -66,6 +84,9 @@ def to_arrays(pol: Policy) -> PolicyArrays:
                                 F32),
         rand_p=jnp.asarray(pol.rand_p, F32),
         pcal_frac=jnp.asarray(pol.pcal_frac, F32),
+        label_sel=_one_hot(LABEL_MECHS.index(pol.labeling),
+                           len(LABEL_MECHS)),
+        reclass_interval=jnp.asarray(pol.reclass_interval, F32),
     )
 
 

@@ -1,0 +1,198 @@
+"""Cross-engine metamorphic test harness (ISSUE 5 satellite).
+
+Where the differential suites pin engine-vs-engine and ref-vs-vectorized
+EQUALITY, this suite pins *metamorphic* invariants — transformations of
+the inputs whose effect on the outputs is known a priori:
+
+  M1  warp-ID permutation invariance: relabeling warps permutes per-warp
+      outputs but leaves AGGREGATE IPC (the sum of per-warp progress
+      rates) invariant up to event-interleaving noise, on both engines.
+      Holds only for warp-type-driven policies — PCAL's token assignment
+      is warp-id-keyed by construction, so it is excluded by design.
+  M2  seed-translation determinism: a trace is a pure function of
+      (spec, seed) through the counter RNG — regenerating is bit
+      identical, batch columns equal singles, distinct seeds differ.
+  M3  schedule degeneracy: a single-phase ``phases=[...]`` spec reduces
+      BYTE-identically to the legacy static spec (same RNG coordinates).
+  M4  engine degeneracy: ``wave_size=1`` makes the wavefront engine the
+      event loop — exact on every ``PHASED_*`` spec, oracle and stale
+      labeling modes included. (The 1k/2k-warp specs are shrunk to 48
+      warps — the full-size event run is the ~10-minute path the
+      wavefront engine exists to avoid; the schedule, mixes, churn and
+      per-phase intensities are untouched.)
+
+All phased specs exercise drift: these invariants failing only on
+phased inputs is exactly the regression class this file exists to
+catch.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import tracegen as TG
+from repro.core import workloads as WL
+from repro.core.simulator import SimParams, simulate_sweep
+
+PRM = SimParams()
+#: warp-type-driven policies only (see M1 note on PCAL)
+TYPE_POLICIES = (BL.BASELINE, BL.WBYP, BL.MEDIC)
+
+TRACE_KEYS = ("lines", "pcs", "archetype", "archetype2", "oracle_wtype",
+              "archetype_phases")
+
+
+def _shrunk(spec: TG.TraceSpec, n_warps: int = 48) -> TG.TraceSpec:
+    return dataclasses.replace(spec, n_warps=min(spec.n_warps, n_warps))
+
+
+def _sweep(tr, n_warps, lanes, policies, engine, **kw):
+    out = simulate_sweep(
+        jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+        jnp.asarray(tr["compute_gap"]), policies, n_warps=n_warps,
+        lanes=lanes, prm=PRM, engine=engine,
+        oracle_types=jnp.asarray(tr["oracle_wtype"]), **kw)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# M1 — warp-ID permutation invariance of aggregate IPC
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("source,engine", [
+    ("BFS", "event"), ("BFS", "wavefront"),
+    ("PHASED48", "event"), ("PHASED48", "wavefront"),
+])
+def test_warp_permutation_invariance_of_aggregate_ipc(source, engine):
+    """Permuting warp ids re-times the event interleaving (tie-breaks,
+    wave composition) but must not change aggregate throughput: measured
+    worst deviation is 0.7% across engines/specs — asserted at 1.5%."""
+    spec = TG.PHASED_SPECS[source] if source in TG.PHASED_SPECS \
+        else TG.TraceSpec.from_workload(WL.WORKLOADS[source])
+    tr = TG.generate(spec, 0)
+    w_n, lanes = spec.n_warps, spec.lines_per_instr
+    base = _sweep(tr, w_n, lanes, TYPE_POLICIES, engine)["ipc"]
+    perm = np.random.default_rng(1).permutation(w_n)
+    tr_p = dict(tr, lines=tr["lines"][:, perm], pcs=tr["pcs"][:, perm],
+                oracle_wtype=tr["oracle_wtype"][:, perm])
+    permuted = _sweep(tr_p, w_n, lanes, TYPE_POLICIES, engine)["ipc"]
+    rel = np.abs(permuted - base) / base
+    assert rel.max() <= 0.015, (source, engine, rel)
+
+
+# ---------------------------------------------------------------------------
+# M2 — seed-translation determinism of the counter-RNG stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", TG.PHASED_SPECS)
+def test_trace_is_pure_function_of_spec_and_seed(name):
+    spec = _shrunk(TG.PHASED_SPECS[name])
+    a, b = TG.generate(spec, 7), TG.generate(spec, 7)
+    for k in TRACE_KEYS:
+        assert np.array_equal(a[k], b[k]), (name, k)
+    assert np.array_equal(np.asarray(a["compute_gap"]),
+                          np.asarray(b["compute_gap"]))
+    # distinct seeds -> distinct streams (same schedule, different draws)
+    c = TG.generate(spec, 8)
+    assert not np.array_equal(a["lines"], c["lines"]), name
+
+
+def test_batch_columns_equal_singles_on_phased_specs():
+    specs = [_shrunk(TG.PHASED_SPECS[n]) for n in ("PHASED48", "PHASED1K")]
+    seeds = (0, 5)
+    batch = TG.generate_batch(specs, seeds)
+    for ni, spec in enumerate(specs):
+        for si, seed in enumerate(seeds):
+            one = TG.generate(spec, seed)
+            for k in ("lines", "pcs", "archetype", "oracle_wtype"):
+                assert np.array_equal(batch[k][ni, si], one[k]), \
+                    (spec.name, seed, k)
+            np.testing.assert_array_equal(
+                batch["compute_gap"][ni, si],
+                np.broadcast_to(one["compute_gap"],
+                                batch["compute_gap"][ni, si].shape))
+
+
+# ---------------------------------------------------------------------------
+# M3 — a single-phase schedule IS the legacy static spec, byte for byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["BFS", "BP", "CONS"])
+def test_single_phase_spec_reduces_to_legacy_static(workload, seed=3):
+    base = TG.TraceSpec.from_workload(WL.WORKLOADS[workload])
+    one = dataclasses.replace(base, phases=(TG.Phase(),))
+    a, b = TG.generate(base, seed), TG.generate(one, seed)
+    for k in ("lines", "pcs", "archetype", "archetype2", "oracle_wtype"):
+        assert np.array_equal(a[k], b[k]), (workload, k)
+    # the gap must stay the legacy SCALAR (not a broadcast [I] vector)
+    assert np.ndim(b["compute_gap"]) == 0
+    assert a["compute_gap"] == b["compute_gap"]
+    # and the loop reference agrees on the reduced spec too
+    r = TG.generate_ref(one, seed)
+    for k in ("lines", "pcs", "oracle_wtype"):
+        assert np.array_equal(b[k], r[k]), (workload, k)
+
+
+def test_single_phase_with_matching_knobs_still_reduces():
+    """Explicitly spelling out the defaults (mix=spec.mix, spec
+    intensity) must not change a single byte either."""
+    base = TG.TraceSpec.from_workload(WL.WORKLOADS["SSSP"])
+    one = dataclasses.replace(base, phases=(
+        TG.Phase(frac=2.5, mix=base.mix, intensity=base.intensity),))
+    a, b = TG.generate(base, 0), TG.generate(one, 0)
+    for k in ("lines", "pcs", "archetype", "oracle_wtype"):
+        assert np.array_equal(a[k], b[k]), k
+    assert np.ndim(b["compute_gap"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# M4 — wave_size=1 wavefront == event, on every PHASED_* spec
+# ---------------------------------------------------------------------------
+
+INT_KEYS = ("l2_accesses", "l2_hits", "dram_accesses", "row_hits",
+            "bypasses", "qdelay_hist", "evictions_by_type", "warp_type")
+
+
+@pytest.mark.parametrize("name", TG.PHASED_SPECS)
+def test_wave_of_one_matches_event_on_phased_specs(name):
+    """The wave machinery with chronological selection IS the event loop
+    — including the policy-visible labeling paths (stale's frozen
+    labels, oracle's ground-truth substitution) on drifting traces.
+    Decision/counter outputs must be IDENTICAL; float metrics are summed
+    in a different association order (per-request vs per-wave), so they
+    get a float32-accumulation tolerance."""
+    spec = _shrunk(TG.PHASED_SPECS[name])
+    tr = TG.generate(spec, 0)
+    pols = (BL.MEDIC, BL.MEDIC_STALE, BL.MEDIC_ORACLE)
+    ev = _sweep(tr, spec.n_warps, spec.lines_per_instr, pols, "event")
+    wf = _sweep(tr, spec.n_warps, spec.lines_per_instr, pols, "wavefront",
+                wave_size=1)
+    for k in INT_KEYS:
+        assert np.array_equal(ev[k], wf[k]), (name, k)
+    for k in ev:
+        if k in INT_KEYS:
+            continue
+        np.testing.assert_allclose(wf[k], ev[k], rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{name}/{k}")
+
+
+# ---------------------------------------------------------------------------
+# the phased suite end-to-end on BOTH engines via one Experiment
+# ---------------------------------------------------------------------------
+
+def test_phased_experiment_runs_on_both_engines():
+    """`Scenario.phased` suite through the declarative front door, same
+    Experiment re-targeted per engine; engines agree within the
+    differential envelope."""
+    from repro.api import registry
+    exp = registry.phased(("PHASED48",), name="phased48_x_engine")
+    rs_wf = exp.run()
+    rs_ev = exp.with_(engine="event").run()
+    for pol in [p.name for p in exp.policies]:
+        wf = float(np.asarray(rs_wf.value("ipc", scenario="PHASED48",
+                                          policy=pol, seed=0)))
+        ev = float(np.asarray(rs_ev.value("ipc", scenario="PHASED48",
+                                          policy=pol, seed=0)))
+        assert abs(wf - ev) / ev <= 0.02, (pol, wf, ev)

@@ -38,9 +38,14 @@ def check_invariants(spec: TG.TraceSpec, seed: int) -> None:
     w_n = spec.n_warps
     assert lines.max() < 2 ** 31 and lines.min() >= 0
 
-    # I1 — mixture respected (binomial 5-sigma + discreteness slack)
-    counts = np.bincount(arch, minlength=len(spec.mix))
-    for a, p in enumerate(spec.mix):
+    # I1 — mixture respected (binomial 5-sigma + discreteness slack);
+    # ``archetype`` is the phase-0 draw, so the reference mixture is the
+    # first phase's (falling back to the spec's base mix)
+    mix0 = spec.mix
+    if spec.phases is not None and spec.phases[0].mix is not None:
+        mix0 = spec.phases[0].mix
+    counts = np.bincount(arch, minlength=len(mix0))
+    for a, p in enumerate(mix0):
         sigma = np.sqrt(max(p * (1 - p), 1e-9) / w_n)
         assert abs(counts[a] / w_n - p) <= 5 * sigma + 2 / w_n, \
             (spec.name, a, counts[a] / w_n, p)
@@ -59,27 +64,43 @@ def check_invariants(spec: TG.TraceSpec, seed: int) -> None:
     stripe = offs // layout.fresh_stride
     assert bool(np.all(stripe[fresh_mask] == np.broadcast_to(
         wi, lines.shape)[fresh_mask])), spec.name
-    # all_miss warps (empty working set) must be pure streaming
+    # warps whose working set is empty in EVERY phase must stream purely
     tab = spec.archetype_table()
-    dead = np.flatnonzero((tab[arch, 0] == 0)
-                          & (tab[tr["archetype2"], 0] == 0))
+    dead = np.flatnonzero(np.all(tab[tr["archetype_phases"], 0] == 0,
+                                 axis=1))
     if dead.size:
         assert bool(np.all(fresh_mask[:, dead, :])), spec.name
 
-    # I4 — stability: without phase shifts, every reuse (non-streaming)
-    # line in EITHER half comes from the warp's single lowered working
-    # set (or the shared pool) — the same universe all kernel long
-    if not spec.phase_shift:
+    # I4 — per-phase reuse universe: every reuse (non-streaming) line an
+    # instruction of phase p draws comes from the warp's phase-p lowered
+    # working set or the shared pool. For a static spec all phases share
+    # one universe (Fig 4's stability premise); for phased specs this
+    # pins the address structure AT each phase boundary — churned
+    # working sets swap universes exactly where the schedule says.
+    if not spec.phase_shift and spec.phases is None:
         assert np.array_equal(arch, tr["archetype2"])
-        _, wp = TG.lower(spec, [seed])
-        half = spec.n_instr // 2
-        pool_set = set(wp.pool[0].tolist())
-        for w in range(0, w_n, max(w_n // 8, 1)):
-            size = int(wp.ws_size[0, w, 0])
-            allowed = set(wp.ws_table[0, w, :size].tolist()) | pool_set
-            for sl in (slice(0, half), slice(half, None)):
-                used = lines[sl, w][~fresh_mask[sl, w]]
-                assert set(used.ravel().tolist()) <= allowed, (spec.name, w)
+    _, wp = TG.lower(spec, [seed])
+    phase_of = TG.phase_of_instr(spec)
+    pool_set = set(wp.pool[0].tolist())
+    for w in range(0, w_n, max(w_n // 8, 1)):
+        for p in range(wp.n_phases):
+            rows = np.flatnonzero(phase_of == p)
+            if rows.size == 0:
+                continue
+            size = int(wp.ws_size[0, w, p])
+            allowed = set(wp.ws_table[0, w, p, :size].tolist()) | pool_set
+            used = lines[rows][:, w][~fresh_mask[rows][:, w]]
+            assert set(used.ravel().tolist()) <= allowed, \
+                (spec.name, w, p)
+
+    # I5 — oracle labels are piecewise-constant on phases and in range
+    oracle = tr["oracle_wtype"]
+    assert oracle.min() >= 0 and oracle.max() < 5
+    for p in range(wp.n_phases):
+        rows = np.flatnonzero(phase_of == p)
+        if rows.size:
+            assert bool(np.all(oracle[rows] == oracle[rows[0]])), \
+                (spec.name, p)
 
 
 @pytest.mark.parametrize("workload", WL.WORKLOAD_NAMES)
@@ -91,6 +112,11 @@ def test_invariants_paper_workloads(workload):
 @pytest.mark.parametrize("name", TG.STRESS_SPECS)
 def test_invariants_stress_matrix(name):
     check_invariants(TG.STRESS_SPECS[name], seed=1)
+
+
+@pytest.mark.parametrize("name", TG.PHASED_SPECS)
+def test_invariants_phased_family(name):
+    check_invariants(TG.PHASED_SPECS[name], seed=1)
 
 
 def test_mix_fraction_converges_at_scale():
@@ -121,24 +147,45 @@ def test_non_phase_shift_never_flips():
 
 if HAVE_HYPOTHESIS:
     @st.composite
-    def trace_specs(draw):
+    def archetype_mixes(draw):
         n_arch = 5
         weights = [draw(st.integers(0, 10)) for _ in range(n_arch)]
         if sum(weights) == 0:
             weights[draw(st.integers(0, n_arch - 1))] = 1
         total = sum(weights)
-        mix = tuple(x / total for x in weights)
+        return tuple(x / total for x in weights)
+
+    @st.composite
+    def phase_schedules(draw):
+        """Random drift schedules: 1–4 phases with random lengths,
+        optional per-phase mixes/flip/churn/intensity — the TraceSpec
+        surface the phased family opens (ISSUE 5)."""
+        n_ph = draw(st.integers(1, 4))
+        return tuple(
+            TG.Phase(
+                frac=draw(st.floats(0.05, 3.0)),
+                mix=draw(st.one_of(st.none(), archetype_mixes())),
+                flip_prob=draw(st.one_of(st.none(), st.floats(0.0, 1.0))),
+                churn=draw(st.floats(0.0, 1.0)),
+                intensity=draw(st.one_of(st.none(), st.floats(0.0, 1.0))),
+            ) for _ in range(n_ph))
+
+    @st.composite
+    def trace_specs(draw):
+        phases = draw(st.one_of(st.none(), phase_schedules()))
         return TG.TraceSpec(
             name=draw(st.sampled_from(["fuzzA", "fuzzB", "fuzzC"])),
-            mix=mix,
+            mix=draw(archetype_mixes()),
             intensity=draw(st.floats(0.0, 1.0)),
             n_warps=draw(st.integers(1, 192)),
             n_instr=2 * draw(st.integers(1, 16)),
             lines_per_instr=draw(st.integers(1, 8)),
             n_pcs=draw(st.integers(1, 12)),
-            phase_shift=draw(st.booleans()),
+            # phases and the legacy mid-kernel flip are exclusive
+            phase_shift=draw(st.booleans()) if phases is None else False,
             phase_flip_prob=draw(st.floats(0.0, 1.0)),
             shared_boost=draw(st.floats(0.0, 8.0)),
+            phases=phases,
         )
 
     @settings(max_examples=40, deadline=None)
@@ -153,5 +200,27 @@ if HAVE_HYPOTHESIS:
                                     n_instr=min(spec.n_instr, 8))
         vec = TG.generate(small, seed)
         ref = TG.generate_ref(small, seed)
-        for key in ("lines", "pcs", "archetype", "archetype2"):
+        for key in ("lines", "pcs", "archetype", "archetype2",
+                    "oracle_wtype", "archetype_phases"):
             assert np.array_equal(vec[key], ref[key]), key
+        assert np.array_equal(np.asarray(vec["compute_gap"]),
+                              np.asarray(ref["compute_gap"]))
+
+    @settings(max_examples=20, deadline=None)
+    @given(phases=phase_schedules(), seed=st.integers(0, 2 ** 31 - 1),
+           n_instr=st.integers(1, 12))
+    def test_phase_boundary_parity_fuzzed(phases, seed, n_instr):
+        """ref==vectorized exact parity and per-phase address-region
+        structure at EVERY phase boundary, over random schedules whose
+        rounded boundaries include degenerate (zero-length) phases."""
+        spec = TG.TraceSpec("fuzzP", mix=(0.2, 0.2, 0.2, 0.2, 0.2),
+                            intensity=0.9, n_warps=16, n_instr=2 * n_instr,
+                            lines_per_instr=4, phases=phases)
+        bounds, _ = TG.compile_schedule(spec)
+        assert bounds[0] == 0 and bounds[-1] == spec.n_instr
+        assert np.all(np.diff(bounds) >= 0)
+        vec = TG.generate(spec, seed)
+        ref = TG.generate_ref(spec, seed)
+        for key in ("lines", "pcs", "oracle_wtype", "archetype_phases"):
+            assert np.array_equal(vec[key], ref[key]), key
+        check_invariants(spec, seed)

@@ -29,8 +29,18 @@ from repro.api.registry import STRESS_POLICIES
 from repro.core import baselines as BL
 from repro.core import tracegen as TG
 from repro.core.simulator import Policy, SimParams, simulate_sweep
+from repro.kernels.wavefront_scan import ops as WSCAN
 
 PRM = SimParams()
+
+#: what engine="wavefront" actually ran in this process — recorded in
+#: every wavefront row so BENCH_*.json trajectories stay comparable
+#: across PRs that change the default (event rows carry "-")
+WF_BACKEND = WSCAN.resolve_backend("auto")
+
+
+def _backend_of(engine: str) -> str:
+    return WF_BACKEND if engine == "wavefront" else "-"
 
 
 def block_tree(tree):
@@ -104,9 +114,11 @@ def engine_scale(quick: bool = False) -> Tuple[List[dict], Dict]:
     t_wf = _timed_sweep(args, STRESS_POLICIES,
                         engine="wavefront", **kw)
     rows.append({"scale": "48-warp sweep", "engine": "event",
+                 "scan_backend": _backend_of("event"),
                  "policies": len(STRESS_POLICIES),
                  "wall_s": round(t_ev, 3)})
     rows.append({"scale": "48-warp sweep", "engine": "wavefront",
+                 "scan_backend": _backend_of("wavefront"),
                  "policies": len(STRESS_POLICIES),
                  "wall_s": round(t_wf, 3)})
     derived["speedup_48"] = round(t_ev / t_wf, 2)
@@ -132,9 +144,11 @@ def engine_scale(quick: bool = False) -> Tuple[List[dict], Dict]:
     wf2k = _timed_sweep(sargs, (BL.MEDIC,),
                         engine="wavefront", **skw)
     rows.append({"scale": "HAMMER2K 1-policy warm", "engine": "event",
+                 "scan_backend": _backend_of("event"),
                  "policies": 1, "wall_s": round(ev2k, 2)})
     rows.append({"scale": "HAMMER2K 1-policy warm",
-                 "engine": "wavefront", "policies": 1,
+                 "engine": "wavefront",
+                 "scan_backend": _backend_of("wavefront"), "policies": 1,
                  "wall_s": round(wf2k, 2)})
     derived["speedup_hammer2k"] = round(ev2k / wf2k, 1)
 
@@ -144,6 +158,7 @@ def engine_scale(quick: bool = False) -> Tuple[List[dict], Dict]:
                               **skw))
     h2k4 = time.perf_counter() - t0
     rows.append({"scale": "HAMMER2K 4-policy cold", "engine": "wavefront",
+                 "scan_backend": _backend_of("wavefront"),
                  "policies": len(STRESS_POLICIES),
                  "wall_s": round(h2k4, 2)})
     derived["hammer2k_s"] = round(h2k4, 2)
@@ -154,6 +169,7 @@ def engine_scale(quick: bool = False) -> Tuple[List[dict], Dict]:
         rows.append({
             "scale": f"stress:{name} (shape-group wall)",
             "engine": "wavefront",
+            "scan_backend": _backend_of("wavefront"),
             "policies": len(STRESS_POLICIES),
             "wall_s": round(walls[name], 2),
             "best_policy": STRESS_POLICIES[
@@ -163,4 +179,46 @@ def engine_scale(quick: bool = False) -> Tuple[List[dict], Dict]:
     derived["stress_max_warps"] = max(
         s.n_warps for s in TG.STRESS_SPECS.values())
     derived["stress_scenarios"] = len(TG.STRESS_SPECS)
+    return rows, derived
+
+
+def fused_ab(quick: bool = False) -> Tuple[List[dict], Dict]:
+    """In-run unfused-vs-fused A/B on the wavefront engine (ISSUE 6
+    acceptance): both sides run warm in the SAME process on the same
+    trace, so the ratio is meaningful even on noisy shared containers
+    (never compare cross-run wall-clock — CHANGES.md PR 4 note).
+
+    ``scan_backend="ref"`` is the pre-fusion multi-pass timing pass with
+    argsort wave selection; ``"fused"`` the associative-scan + top_k
+    path that ``"auto"`` resolves to on CPU. Outputs are bitwise-equal
+    (tests/test_engine_differential.py), so this measures pure engine
+    speed. The headline number is ``fused_speedup_wide1k`` — the 1024-
+    warp point where the [Q, N] mask materialization and the O(W log W)
+    argsort dominate; --quick stops at the cheap 48-warp pair and gates
+    on ``fused_speedup_min`` only.
+    """
+    rows: List[dict] = []
+    derived: Dict[str, object] = {}
+    points = [("BFS48", api.Scenario.workload("BFS"), STRESS_POLICIES)]
+    if not quick:
+        points.append(("WIDE1K", api.Scenario.stress("WIDE1K"),
+                       (BL.MEDIC,)))
+    speedups = []
+    for name, scen, policies in points:
+        tr = scen.materialize()
+        args = _sweep_args(tr, idx=0)
+        (_, n_warps, lanes) = scen.shape
+        kw = dict(n_warps=n_warps, lanes=lanes, prm=PRM,
+                  engine="wavefront")
+        t_ref = _timed_sweep(args, policies, scan_backend="ref", **kw)
+        t_fused = _timed_sweep(args, policies, scan_backend="fused", **kw)
+        for backend, wall in (("ref", t_ref), ("fused", t_fused)):
+            rows.append({"scale": f"fused_ab:{name}",
+                         "engine": "wavefront", "scan_backend": backend,
+                         "policies": len(policies),
+                         "wall_s": round(wall, 3)})
+        sp = t_ref / t_fused
+        speedups.append(sp)
+        derived[f"fused_speedup_{name.lower()}"] = round(sp, 2)
+    derived["fused_speedup_min"] = round(min(speedups), 2)
     return rows, derived

@@ -13,7 +13,7 @@ whole experiment runs in exactly one call per (shape, engine) bucket —
 the invariant the seed-era callers each re-implemented by hand.
 Executables are further shared ACROSS buckets (and across experiments)
 whenever the jit compile key — (shape, flat batch size, policy count,
-engine, wave_size, SimParams) — agrees, because ``simulate_sweep``'s
+engine, wave_size, scan_backend, SimParams) — agrees, because ``simulate_sweep``'s
 underlying jit cache is keyed on exactly those; the plan reports that
 via ``n_executables``.
 
@@ -44,6 +44,7 @@ class PlanCall:
     shape: Shape                       # (n_instr, n_warps, lines_per_instr)
     engine: str
     wave_size: Optional[int]
+    scan_backend: str
     scenarios: Tuple[Scenario, ...]    # seed blocks stack in this order
 
     @property
@@ -55,7 +56,7 @@ class PlanCall:
         """Everything ``simulate_sweep``'s jit cache keys on: two calls
         with equal keys share one compiled executable."""
         return (self.shape, self.flat, n_policies, self.engine,
-                self.wave_size, prm)
+                self.wave_size, self.scan_backend, prm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +115,7 @@ class Plan:
                 np.asarray(tr["compute_gap"]), exp.policies,
                 n_warps=n_warps, lanes=lanes, prm=exp.prm,
                 engine=call.engine, wave_size=call.wave_size,
+                scan_backend=call.scan_backend,
                 oracle_types=np.asarray(tr["oracle_wtype"]))
             out = {k: np.asarray(v) for k, v in out.items()}  # [P, F, ...]
             wall = time.perf_counter() - t0
@@ -144,6 +146,9 @@ class Experiment:
     policies: Tuple[Policy, ...]
     engine: str = "event"
     wave_size: Optional[int] = None
+    #: wavefront timing-pass backend (repro.kernels.wavefront_scan);
+    #: "auto" = fused lax scans on CPU, Pallas kernel on TPU
+    scan_backend: str = "auto"
     prm: SimParams = SimParams()
 
     def __post_init__(self):
@@ -165,7 +170,8 @@ class Experiment:
         if pdupes:
             raise ValueError(f"experiment {self.name!r}: duplicate policy "
                              f"names {sorted(pdupes)}")
-        validate_engine_args(self.engine, self.wave_size)
+        validate_engine_args(self.engine, self.wave_size,
+                             self.scan_backend)
 
     def compile(self) -> Plan:
         """Bucket scenarios by trace shape; one PlanCall per bucket."""
@@ -173,7 +179,8 @@ class Experiment:
         for s in self.scenarios:
             buckets.setdefault(s.shape, []).append(s)
         calls = tuple(
-            PlanCall(shape, self.engine, self.wave_size, tuple(scens))
+            PlanCall(shape, self.engine, self.wave_size, self.scan_backend,
+                     tuple(scens))
             for shape, scens in buckets.items())
         return Plan(self, calls)
 
@@ -187,8 +194,9 @@ class Experiment:
 
 def run(scenarios: Sequence[Scenario], policies: Sequence[Policy],
         engine: str = "event", wave_size: Optional[int] = None,
-        prm: SimParams = SimParams(), name: str = "adhoc",
-        keep_traces: bool = False) -> ResultSet:
+        scan_backend: str = "auto", prm: SimParams = SimParams(),
+        name: str = "adhoc", keep_traces: bool = False) -> ResultSet:
     """One-shot helper: ``api.run(scenarios, policies)`` -> ResultSet."""
     return Experiment(name, tuple(scenarios), tuple(policies), engine,
-                      wave_size, prm).run(keep_traces=keep_traces)
+                      wave_size, scan_backend, prm).run(
+                          keep_traces=keep_traces)

@@ -27,18 +27,21 @@ from repro.core.engine import event as _event
 from repro.core.engine import wavefront as _wavefront
 from repro.core.engine.state import (N_QBINS, SimParams, SimState,
                                      init_state)
+from repro.kernels.wavefront_scan.ops import BACKENDS as SCAN_BACKENDS
 from repro.policy import Policy, stack_policies, to_arrays
 
 ENGINES = ("event", "wavefront")
 
 
-def validate_engine_args(engine: str, wave_size: Optional[int] = None) -> None:
+def validate_engine_args(engine: str, wave_size: Optional[int] = None,
+                         scan_backend: str = "auto") -> None:
     """Front-door validation shared by ``simulate``/``simulate_sweep`` and
     the declarative ``repro.api`` layer.
 
     Raises ``ValueError`` for an unknown engine, and — instead of silently
-    ignoring it — for a ``wave_size`` passed to any engine that does not
-    consume one (only ``"wavefront"`` does).
+    ignoring it — for a ``wave_size`` or non-default ``scan_backend``
+    passed to any engine that does not consume one (only ``"wavefront"``
+    does).
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
@@ -53,13 +56,23 @@ def validate_engine_args(engine: str, wave_size: Optional[int] = None) -> None:
                 f"wave_size must be an integer, got {wave_size!r}")
         if wave_size < 1:
             raise ValueError(f"wave_size must be >= 1, got {wave_size!r}")
+    if scan_backend not in SCAN_BACKENDS:
+        raise ValueError(
+            f"unknown scan_backend {scan_backend!r}; choose from "
+            f"{SCAN_BACKENDS}")
+    if scan_backend != "auto" and engine != "wavefront":
+        raise ValueError(
+            f"scan_backend={scan_backend!r} is only meaningful with "
+            f"engine='wavefront'; engine={engine!r} would silently "
+            f"ignore it")
 
 
-def _core(engine: str, wave_size: Optional[int]):
-    validate_engine_args(engine, wave_size)
+def _core(engine: str, wave_size: Optional[int], scan_backend: str):
+    validate_engine_args(engine, wave_size, scan_backend)
     if engine == "event":
         return _event.simulate_core
-    return partial(_wavefront.simulate_core, wave_size=wave_size)
+    return partial(_wavefront.simulate_core, wave_size=wave_size,
+                   scan_backend=scan_backend)
 
 
 def _oracle_or_zeros(oracle_types, trace_lines, policies):
@@ -80,24 +93,28 @@ def _oracle_or_zeros(oracle_types, trace_lines, policies):
 
 
 @partial(jax.jit,
-         static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size"))
+         static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size",
+                          "scan_backend"))
 def _simulate_one(trace_lines, trace_pcs, compute_gap, oracle_types, pa, *,
                   n_warps: int, lanes: int, prm: SimParams,
                   engine: str = "event",
-                  wave_size: Optional[int] = None) -> Dict[str, Any]:
-    core = _core(engine, wave_size)
+                  wave_size: Optional[int] = None,
+                  scan_backend: str = "auto") -> Dict[str, Any]:
+    core = _core(engine, wave_size, scan_backend)
     return core(trace_lines, trace_pcs, compute_gap, oracle_types, pa,
                 n_warps=n_warps, lanes=lanes, prm=prm)
 
 
 @partial(jax.jit,
-         static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size"))
+         static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size",
+                          "scan_backend"))
 def _simulate_batch(trace_lines, trace_pcs, compute_gap, oracle_types,
                     pa_batch, *, n_warps: int, lanes: int, prm: SimParams,
                     engine: str = "event",
-                    wave_size: Optional[int] = None):
-    one = partial(_core(engine, wave_size), n_warps=n_warps, lanes=lanes,
-                  prm=prm)
+                    wave_size: Optional[int] = None,
+                    scan_backend: str = "auto"):
+    one = partial(_core(engine, wave_size, scan_backend), n_warps=n_warps,
+                  lanes=lanes, prm=prm)
     if trace_lines.ndim == 4:      # seed-stacked traces [S, I, W, L]
         over_seeds = jax.vmap(one, in_axes=(0, 0, 0, 0, None))
         return jax.vmap(over_seeds, in_axes=(None, None, None, None, 0))(
@@ -109,7 +126,7 @@ def _simulate_batch(trace_lines, trace_pcs, compute_gap, oracle_types,
 def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
              lanes: int, prm: SimParams, pol: Policy,
              engine: str = "event", wave_size: Optional[int] = None,
-             oracle_types=None) -> Dict[str, Any]:
+             scan_backend: str = "auto", oracle_types=None) -> Dict[str, Any]:
     """Run one workload under one policy.
 
     ``engine="event"`` (default) is the exact discrete-event reference:
@@ -124,24 +141,32 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
     The policy enters as a traced `PolicyArrays`, so every `Policy` preset
     reuses the same compiled executable for a given workload shape.
 
+    ``scan_backend`` selects the wavefront timing-pass implementation
+    (``repro.kernels.wavefront_scan``): ``"auto"`` (default) picks the
+    fused associative-scan path on CPU and the Pallas kernel on TPU,
+    both output-identical to ``"ref"``, the unfused pre-fusion form kept
+    for in-run perf A/Bs.
+
     trace_lines: i32[I, W, L]; trace_pcs: i32[I, W]; compute_gap: f32
     scalar or f32[I] (phased per-instruction intensity); oracle_types:
     optional i32[I, W] ground-truth labels — required (pass the trace's
     ``oracle_wtype``) when the policy's labeling mode is "oracle".
     Returns metrics dict (all jnp arrays).
     """
-    validate_engine_args(engine, wave_size)
+    validate_engine_args(engine, wave_size, scan_backend)
     return _simulate_one(trace_lines, trace_pcs, compute_gap,
                          _oracle_or_zeros(oracle_types, trace_lines,
                                           (pol,)),
                          to_arrays(pol), n_warps=n_warps, lanes=lanes,
-                         prm=prm, engine=engine, wave_size=wave_size)
+                         prm=prm, engine=engine, wave_size=wave_size,
+                         scan_backend=scan_backend)
 
 
 def simulate_sweep(trace_lines, trace_pcs, compute_gap,
                    policies: Sequence[Policy], *, n_warps: int, lanes: int,
                    prm: SimParams, engine: str = "event",
                    wave_size: Optional[int] = None,
+                   scan_backend: str = "auto",
                    oracle_types=None) -> Dict[str, Any]:
     """Run a whole policy sweep in ONE jitted, vmapped call.
 
@@ -158,16 +183,17 @@ def simulate_sweep(trace_lines, trace_pcs, compute_gap,
     Metrics match per-policy `simulate` calls bit-for-bit on either
     engine (the parity is enforced by tests/test_policy_engine.py).
     """
-    validate_engine_args(engine, wave_size)
+    validate_engine_args(engine, wave_size, scan_backend)
     pa = stack_policies(policies)
     return _simulate_batch(trace_lines, trace_pcs, compute_gap,
                            _oracle_or_zeros(oracle_types, trace_lines,
                                             policies),
                            pa, n_warps=n_warps, lanes=lanes, prm=prm,
-                           engine=engine, wave_size=wave_size)
+                           engine=engine, wave_size=wave_size,
+                           scan_backend=scan_backend)
 
 
 __all__ = [
-    "ENGINES", "N_QBINS", "SimParams", "SimState", "init_state",
-    "simulate", "simulate_sweep", "validate_engine_args",
+    "ENGINES", "N_QBINS", "SCAN_BACKENDS", "SimParams", "SimState",
+    "init_state", "simulate", "simulate_sweep", "validate_engine_args",
 ]

@@ -54,6 +54,28 @@ def eaf_index(addr, prm: SimParams):
 # ② bypass decision from current classifier / PC-table state
 # ---------------------------------------------------------------------------
 
+def bypass_decision_vals(warp_type_w, accesses_w, token_w, st: SimState,
+                         addr, pc, valid, prm: SimParams,
+                         pa: PolicyArrays, oracle_wt):
+    """``bypass_decision`` with the per-warp classifier inputs
+    (``clf.warp_type[w]``, ``clf.accesses[w]``, ``tokens[w]``) passed
+    as values instead of gathered here. The wavefront engine's fused
+    path carries those as wave-resident vectors across the lane scan
+    (each warp appears at most once per wave, so the carried slice is
+    exactly what a fresh gather would read); the event path and the
+    unfused wavefront path gather per call via ``bypass_decision``.
+    """
+    wtype = POL.select_label(pa, warp_type_w, oracle_wt)
+    pidx = pc_index(pc, prm)
+    probe = (accesses_w % 8) == 0
+    rand_u = hash_index(addr, 7, 65536).astype(F32) / 65536.0
+    byp = POL.bypass_decision(pa, wtype=wtype, probe=probe,
+                              token_bit=token_w,
+                              pc_hits=st.pc_hits[pidx],
+                              pc_acc=st.pc_acc[pidx], rand_u=rand_u)
+    return byp & valid, wtype, pidx
+
+
 def bypass_decision(st: SimState, w, addr, pc, valid, prm: SimParams,
                     pa: PolicyArrays, tokens, oracle_wt):
     """Returns (byp, wtype, pidx) for one request or a wave of requests.
@@ -66,15 +88,9 @@ def bypass_decision(st: SimState, w, addr, pc, valid, prm: SimParams,
     Periodic probe so a reformed warp can be re-learned: every 8th access
     of a bypassing warp still takes the cache path.
     """
-    wtype = POL.select_label(pa, st.clf.warp_type[w], oracle_wt)
-    pidx = pc_index(pc, prm)
-    probe = (st.clf.accesses[w] % 8) == 0
-    rand_u = hash_index(addr, 7, 65536).astype(F32) / 65536.0
-    byp = POL.bypass_decision(pa, wtype=wtype, probe=probe,
-                              token_bit=tokens[w],
-                              pc_hits=st.pc_hits[pidx],
-                              pc_acc=st.pc_acc[pidx], rand_u=rand_u)
-    return byp & valid, wtype, pidx
+    return bypass_decision_vals(st.clf.warp_type[w], st.clf.accesses[w],
+                                tokens[w], st, addr, pc, valid, prm, pa,
+                                oracle_wt)
 
 
 # ---------------------------------------------------------------------------

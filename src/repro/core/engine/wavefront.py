@@ -1,8 +1,8 @@
 """Wavefront engine (``engine="wavefront"``): batched round-lockstep
 event loop.
 
-Instead of popping ONE earliest-ready warp per `lax.scan` step (the exact
-event engine), each step pops a *wave* of the ``wave_size`` earliest-ready
+Instead of popping ONE earliest-ready warp per step (the exact event
+engine), each step pops a *wave* of the ``wave_size`` earliest-ready
 warps and services all their W×L requests vectorized. Because the wave is
 selected by readiness, its requests are close together in simulated time,
 which is what makes batched processing faithful. Each wave runs two
@@ -18,19 +18,27 @@ passes:
      request *timing*, so the pass needs no queue state. Cross-slot
      structural conflicts inside one sub-step (two wave warps filling
      the same cache set) resolve last-write-wins in chronological slot
-     order via masked scatters.
+     order via masked scatters. On the fused path the lifetime counters
+     and scalar metrics — never read during the wave — are hoisted out
+     of the lane scan and applied once per wave (integer adds, so the
+     totals are exact either way).
 
-  2. **Timing pass** (no scan): all B×L requests of the wave, in
-     warp-major chronological order (the event loop's pop-and-service
-     order), go through segmented prefix queue recovery —
-     for the requests of one bank/channel queue, ``start_j = c_j +
-     max_{i<=j}(max(t_i, free) - c_i)`` where ``c`` is the exclusive
-     prefix sum of service occupancy (a cumsum + cummax per queue yields
-     exactly the sequential FR-FCFS arrival-order service times). The
-     DRAM row-buffer chain links each request to its true chronological
-     predecessor in its channel, and the low-priority queue's floor
-     folds in the running busy horizon of the wave's high-priority chain
-     (strict priority, as in the event engine).
+  2. **Timing pass**: all B×L requests of the wave, in warp-major
+     chronological order (the event loop's pop-and-service order), go
+     through segmented prefix queue recovery — ``start_j = c_j +
+     max_{i<=j}(max(t_i, free) - c_i)`` with ``c`` the exclusive prefix
+     occupancy of the request's queue (exactly the sequential FR-FCFS
+     arrival-order service times). The implementation now lives in
+     ``repro.kernels.wavefront_scan`` behind a backend gate
+     (``scan_backend``): ``"ref"`` is the original unfused multi-pass
+     form, ``"fused"`` a bitwise-identical slot-major reformulation with
+     fast associative scans (the CPU default), ``"pallas"`` a one-pass
+     TPU kernel. The DRAM row-buffer chain links each request to its
+     true chronological predecessor in its channel, and the low-priority
+     queue's floor folds in the running busy horizon of the wave's
+     high-priority chain (strict priority, as in the event engine).
+     Cross-wave carry uses the work-conserving backlog floor
+     (``wavefront_scan.ref.carry_floor``).
 
 The approximation ladder (DESIGN.md §9): event (wave of 1, exact) →
 wavefront (wave of W/6, W/4 at stress populations — near-chronological;
@@ -40,9 +48,17 @@ round). A wave of one warp reduces every prefix op to the event
 engine's scalar update, so single-warp traces match the event path
 exactly.
 
-Cost: O((I·W/B + I) · L) sequential sub-steps with O(B)-vectorized work
-each, vs the event loop's O(I·W·L) sequential steps — this is what runs
-the 1k–4k-warp stress matrix (tracegen/stress.py) end-to-end.
+Cost: the wave loop is a ``lax.while_loop`` capped at ``ceil(I·W/B) +
+I`` steps but exiting at the first wave with no active warp left: with
+>= B warps active every wave services B instructions (<= ceil(I·W/B)
+such waves), and once fewer than B remain every wave advances ALL of
+them (<= I further waves) — the cap is only reached when warp
+completion is maximally staggered, so typical runs take close to
+ceil(I·W/B) steps instead of the cap (the seed-era scan always ran all
+of them; a wave of inactive warps is a proven no-op, so early exit is
+byte-identical). Each step does O(B)-vectorized work, vs the event
+loop's O(I·W·L) sequential steps — this is what runs the 1k–4k-warp
+stress matrix (tracegen/stress.py) end-to-end.
 """
 from __future__ import annotations
 
@@ -55,6 +71,8 @@ from repro.core import classifier as CLF
 from repro.core import warp_types as WT
 from repro.core.engine import request as REQ
 from repro.core.engine.state import SimParams, SimState, init_state
+from repro.kernels.wavefront_scan import ops as WSCAN
+from repro.kernels.wavefront_scan.ref import QueueCarry
 from repro.policy import PolicyArrays, ops as POL
 
 F32 = jnp.float32
@@ -112,16 +130,67 @@ def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight,
     )
 
 
+def _observe_vec(clf_b: CLF.ClassifierState, is_hit, weight,
+                 prm: SimParams, pa: PolicyArrays) -> CLF.ClassifierState:
+    """``_observe_gathered`` on wave-resident [B] counter slices.
+
+    The fused path gathers the wave's classifier rows ONCE before the
+    lane scan, updates them as plain [B] vectors here (no per-lane
+    gather/scatter against the [W] arrays — XLA:CPU serializes those),
+    and scatters them back once per wave. Sound because wave warp ids
+    are distinct: nothing else reads or writes those rows mid-wave, so
+    the carried slice is exactly what a fresh gather would return, and
+    the write-back stores exactly what the per-lane scatters would
+    have."""
+    interval = POL.reclass_interval(pa, prm.sampling_interval)
+    max_windows = POL.reclass_max_windows(pa)
+    hits = clf_b.hits + is_hit.astype(I32) * weight
+    accesses = clf_b.accesses + weight
+    due = accesses >= interval
+    ratio_now = hits.astype(jnp.float32) / jnp.maximum(accesses, 1)
+    new_type = WT.classify(ratio_now, accesses,
+                           mostly_hit_threshold=prm.mostly_hit_threshold,
+                           mostly_miss_threshold=prm.mostly_miss_threshold)
+    relabel = due & (clf_b.windows < max_windows)
+    return CLF.ClassifierState(
+        hits=jnp.where(due, 0, hits),
+        accesses=jnp.where(due, 0, accesses),
+        warp_type=jnp.where(relabel, new_type, clf_b.warp_type),
+        ratio=jnp.where(due, ratio_now, clf_b.ratio),
+        windows=clf_b.windows + due.astype(I32))
+
+
 def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, owt,
-                prm: SimParams, pa: PolicyArrays, tokens) -> tuple:
+                prm: SimParams, pa: PolicyArrays, tokens,
+                hoist: bool, clf_b: Optional[CLF.ClassifierState] = None,
+                tokens_b=None) -> tuple:
     """One lane sub-step of a wave: the timing-independent half of
     ``event._request_step`` for [B] requests (at most one per warp),
-    slots in chronological order."""
+    slots in chronological order. Returns ``(st, clf_b, records)``.
+
+    ``hoist=True`` (the fused path) defers the write-only bookkeeping —
+    lifetime hit/access counters and the scalar metric sums, which
+    nothing reads until finalize — to one per-wave update in the caller;
+    the per-lane outputs it needs ride along in the record tuple either
+    way. All of it is integer accumulation, so the hoisted totals are
+    exactly the per-lane ones.
+
+    ``clf_b`` (fused path) carries the wave's classifier rows as [B]
+    vectors through the lane scan instead of gathering/scattering the
+    [W] arrays every lane — see ``_observe_vec`` for why that is
+    bitwise-equivalent. ``None`` (the ref path) keeps the original
+    per-lane ``_observe_gathered`` graph.
+    """
     m = st.metrics
 
     # ---- ①② label select + bypass decision (shared branchless math) --------
-    byp, wtype, pidx = REQ.bypass_decision(st, w, addr, pc, valid, prm, pa,
-                                           tokens, owt)
+    if clf_b is None:
+        byp, wtype, pidx = REQ.bypass_decision(st, w, addr, pc, valid,
+                                               prm, pa, tokens, owt)
+    else:
+        byp, wtype, pidx = REQ.bypass_decision_vals(
+            clf_b.warp_type, clf_b.accesses, tokens_b, st, addr, pc,
+            valid, prm, pa, owt)
     use_l2 = valid & ~byp
 
     # ---- L2 lookup (sub-step-start tags) -----------------------------------
@@ -165,26 +234,36 @@ def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, owt,
     eaf_gen = jnp.where(reset, st.eaf_gen + 1, st.eaf_gen)
     eaf_ctr = jnp.where(reset, 0, eaf_ctr)
 
-    # ---- ① classifier + PC table + lifetime counters ------------------------
-    clf = _observe_gathered(st.clf, w, hit, valid.astype(I32), prm, pa)
+    # ---- ① classifier + PC table (read by later lanes — never hoisted) -----
+    if clf_b is None:
+        clf = _observe_gathered(st.clf, w, hit, valid.astype(I32), prm, pa)
+    else:
+        clf = st.clf                                 # written back per wave
+        clf_b = _observe_vec(clf_b, hit, valid.astype(I32), prm, pa)
     pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
     pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
-    tot_hits = st.tot_hits.at[w].add(hit.astype(I32))
-    tot_acc = st.tot_acc.at[w].add(valid.astype(I32))
-
-    metrics = dict(m)
-    metrics["l2_accesses"] = m["l2_accesses"] + jnp.sum(use_l2.astype(I32))
-    metrics["l2_hits"] = m["l2_hits"] + jnp.sum(hit.astype(I32))
-    metrics["bypasses"] = m["bypasses"] + jnp.sum(byp.astype(I32))
-    metrics["evictions_by_type"] = m["evictions_by_type"].at[
-        victim_type].add(ev_valid.astype(I32))
 
     new_st = st._replace(
         tags=tags, rrip=rrip, meta_type=meta_type, clf=clf, eaf=eaf,
-        eaf_gen=eaf_gen, eaf_ctr=eaf_ctr, pc_hits=pc_hits, pc_acc=pc_acc,
-        tot_hits=tot_hits, tot_acc=tot_acc, metrics=metrics)
+        eaf_gen=eaf_gen, eaf_ctr=eaf_ctr, pc_hits=pc_hits, pc_acc=pc_acc)
+
+    # ---- lifetime counters + scalar metrics (write-only) --------------------
+    if not hoist:
+        metrics = dict(m)
+        metrics["l2_accesses"] = m["l2_accesses"] + jnp.sum(
+            use_l2.astype(I32))
+        metrics["l2_hits"] = m["l2_hits"] + jnp.sum(hit.astype(I32))
+        metrics["bypasses"] = m["bypasses"] + jnp.sum(byp.astype(I32))
+        metrics["evictions_by_type"] = m["evictions_by_type"].at[
+            victim_type].add(ev_valid.astype(I32))
+        new_st = new_st._replace(
+            tot_hits=st.tot_hits.at[w].add(hit.astype(I32)),
+            tot_acc=st.tot_acc.at[w].add(valid.astype(I32)),
+            metrics=metrics)
+
     hp = POL.is_high_priority(pa, wtype)
-    return new_st, (t_arr, addr, valid, byp, use_l2, hit, hp)
+    return new_st, clf_b, (t_arr, addr, valid, byp, use_l2, hit, hp,
+                           victim_type, ev_valid)
 
 
 class QueueAnchors(NamedTuple):
@@ -211,129 +290,45 @@ def init_anchors(prm: SimParams) -> QueueAnchors:
                         hp_ts=c, hp_sa=c, lp_ts=c, lp_sa=c)
 
 
-def _carry_floor(free, last_ts, last_sa, t_s, t_svc):
-    """Work-conserving carry floor [Q, N] for the next wave's requests.
-
-    A request at/after the queue's serviced frontier (``t_s >= last_ts``)
-    waits for the full busy-until, exactly like the event engine. A
-    *retrograde* request — its warp raced ahead of the warps that last
-    used the queue, so in true event order it would have been serviced
-    amid that backlog, not after it — sees the queue's STANDING BACKLOG
-    (``free - last_sa``) anchored at its own service-arrival time instead
-    of the absolute end-of-service. Single-warp traces are always at the
-    frontier, so they stay exact.
-    """
-    backlog = (free - last_sa)[:, None]              # +inf if queue unused
-    interp = jnp.minimum(free[:, None], t_svc[None, :] + backlog)
-    return jnp.where(t_s[None, :] >= last_ts[:, None], free[:, None],
-                     interp)
-
-
-def _anchor_update(last, mask, t):
-    return jnp.maximum(last,
-                       jnp.max(jnp.where(mask, t[None, :], _NEG), axis=1))
-
-
-def _queue_prefix(mask, t_arr, occ, free):
-    """FIFO service start times for one queue family, vectorized.
-
-    mask: bool[Q, N] — request j belongs to queue q; slots in
-    chronological order. t_arr: f32[N] arrivals; occ: f32[N] per-request
-    occupancy; free: f32[Q, 1|N] per-slot busy-until floor.
-
-    Returns (start[Q, N], end[Q, N]); ``end`` is -inf outside ``mask`` so
-    row-wise maxima skip those entries.
-    """
-    occ_m = jnp.where(mask, occ[None, :], 0.0)
-    c = jnp.cumsum(occ_m, axis=1) - occ_m            # exclusive prefix occ
-    v = jnp.where(mask, jnp.maximum(t_arr[None, :], free) - c, _NEG)
-    start = c + jax.lax.cummax(v, axis=1)
-    end = jnp.where(mask, start + occ_m, _NEG)
-    return start, end
-
-
-def _timing_pass(st: SimState, an: QueueAnchors, recs,
-                 prm: SimParams) -> tuple:
+def _timing_pass(st: SimState, an: QueueAnchors, recs, prm: SimParams,
+                 backend: str) -> tuple:
     """Arrival-ordered queue recovery for one wave's B×L requests.
 
     Chronological bank/channel semantics come from segmented prefix
-    (cumsum/cummax) ops per L2 bank, DRAM channel and priority class over
-    the wave's requests in WARP-MAJOR order — warp slots ascend in ready
-    time (the wave selection argsort) and a warp's lanes stay
-    consecutive, which is exactly the event loop's processing order (pop
-    the earliest warp, service all its lanes back-to-back). Interleaving
-    by raw per-lane arrival instead would shred the DRAM row-buffer
-    streaks a streaming warp's consecutive lines produce. Cross-wave
-    carry uses the work-conserving backlog floor (``_carry_floor``).
+    queue recovery per L2 bank, DRAM channel and priority class over the
+    wave's requests in WARP-MAJOR order — warp slots ascend in ready
+    time (the wave selection) and a warp's lanes stay consecutive, which
+    is exactly the event loop's processing order (pop the earliest warp,
+    service all its lanes back-to-back). Interleaving by raw per-lane
+    arrival instead would shred the DRAM row-buffer streaks a streaming
+    warp's consecutive lines produce. The recovery itself is
+    ``repro.kernels.wavefront_scan`` under the selected backend.
     """
     t_s, addr_s, valid_s, byp_s, use_l2_s, hit_s, hp_s = \
-        [jnp.swapaxes(x, 0, 1).reshape(-1) for x in recs]  # [N = B*L]
-    n = t_s.shape[0]
-    slot = jnp.arange(n, dtype=I32)
+        [jnp.swapaxes(x, 0, 1).reshape(-1) for x in recs[:7]]  # [N = B*L]
     # a wave of ONE warp is the event loop — no batching to compensate
     # for, so the carry floor is the plain busy-until (bitwise parity
     # with engine="event", asserted by the differential suite)
     exact = recs[0].shape[1] == 1
 
-    def carry_floor(free, last_ts, last_sa, t_svc):
-        if exact:
-            return free[:, None]
-        return _carry_floor(free, last_ts, last_sa, t_s, t_svc)
-
-    # ---- L2 bank queues (O3) ----------------------------------------------
     bank = REQ.bank_index(addr_s, prm)
-    bmask = (bank[None, :] == jnp.arange(prm.banks, dtype=I32)[:, None]) \
-        & use_l2_s[None, :]
-    svc = jnp.full((n,), prm.l2_svc, F32)
-    b_start, b_end = _queue_prefix(
-        bmask, t_s, svc,
-        carry_floor(st.bank_free, an.bank_ts, an.bank_ts, t_s))
-    t_head = jnp.sum(jnp.where(bmask, b_start, 0.0), axis=0)
-    bank_free = jnp.maximum(st.bank_free, jnp.max(b_end, axis=1))
-    qdelay = jnp.where(use_l2_s, t_head - t_s, 0.0)
-
-    # ---- ④ DRAM two-queue FR-FCFS ------------------------------------------
-    go_dram = valid_s & (byp_s | ~hit_s)
-    t_dram_arr = jnp.where(byp_s, t_s, t_head + prm.l2_lat)
     ch = REQ.dram_channel(addr_s, prm)
     row = REQ.dram_row(addr_s, prm)
-    n_ch = prm.dram_channels
-    cmask = (ch[None, :] == jnp.arange(n_ch, dtype=I32)[:, None]) \
-        & go_dram[None, :]
+    go_dram = valid_s & (byp_s | ~hit_s)
 
-    # row-buffer chain: each request's predecessor is the previous
-    # request in its channel within this wave, else the carried open row
-    inc = jax.lax.cummax(jnp.where(cmask, slot[None, :], -1), axis=1)
-    prev_idx = jnp.concatenate(
-        [jnp.full((n_ch, 1), -1, I32), inc[:, :-1]], axis=1)
-    prev_row = jnp.where(prev_idx >= 0,
-                         jnp.take(row, jnp.maximum(prev_idx, 0)),
-                         st.cur_row[:, None])
-    row_hit = (prev_row == row[None, :])[ch, slot] & go_dram
-    occ, lat = REQ.dram_occ_lat(row_hit, prm)
+    carry = QueueCarry(
+        bank_free=st.bank_free, bank_ts=an.bank_ts,
+        hp_free=st.hp_free, hp_ts=an.hp_ts, hp_sa=an.hp_sa,
+        lp_free=st.lp_free, lp_ts=an.lp_ts, lp_sa=an.lp_sa,
+        cur_row=st.cur_row)
+    t_head, t0, row_hit, nc = WSCAN.wave_queue_recovery(
+        t_s, bank, use_l2_s, ch, row, go_dram, byp_s, hp_s, carry,
+        banks=prm.banks, channels=prm.dram_channels, l2_svc=prm.l2_svc,
+        l2_lat=prm.l2_lat, occ_rowhit=prm.occ_rowhit,
+        occ_rowmiss=prm.occ_rowmiss, exact=exact, backend=backend)
 
-    mask_hp = cmask & hp_s[None, :]
-    hp_carry = carry_floor(st.hp_free, an.hp_ts, an.hp_sa, t_dram_arr)
-    hp_start, hp_end = _queue_prefix(mask_hp, t_dram_arr, occ, hp_carry)
-    # strict priority: a low-priority request waits for the high queue's
-    # busy horizon at its chronological position
-    hp_busy = jnp.concatenate(
-        [jnp.full((n_ch, 1), _NEG),
-         jax.lax.cummax(hp_end, axis=1)[:, :-1]], axis=1)
-    lp_floor = jnp.maximum(
-        carry_floor(st.lp_free, an.lp_ts, an.lp_sa, t_dram_arr),
-        jnp.maximum(hp_carry, hp_busy))
-    mask_lp = cmask & ~hp_s[None, :]
-    lp_start, lp_end = _queue_prefix(mask_lp, t_dram_arr, occ, lp_floor)
-
-    t0 = jnp.where(hp_s, hp_start[ch, slot], lp_start[ch, slot])
-    hp_free = jnp.maximum(st.hp_free, jnp.max(hp_end, axis=1))
-    lp_free = jnp.maximum(st.lp_free, jnp.max(lp_end, axis=1))
-    last_idx = inc[:, -1]
-    cur_row = jnp.where(last_idx >= 0,
-                        jnp.take(row, jnp.maximum(last_idx, 0)),
-                        st.cur_row)
-
+    qdelay = jnp.where(use_l2_s, t_head - t_s, 0.0)
+    _, lat = REQ.dram_occ_lat(row_hit, prm)
     t_done = jnp.where(hit_s, t_head + prm.l2_lat, t0 + lat)
     t_done = jnp.where(valid_s, t_done, t_s)
 
@@ -341,21 +336,28 @@ def _timing_pass(st: SimState, an: QueueAnchors, recs,
     m = st.metrics
     qbin = REQ.qdelay_bin(qdelay)
     metrics = dict(m)
-    metrics["qdelay_hist"] = m["qdelay_hist"].at[qbin].add(
-        use_l2_s.astype(I32))
+    if WSCAN.resolve_backend(backend) != "ref":
+        # one-hot histogram: integer adds in any order are exact, and
+        # the dense [N, bins] reduce beats XLA:CPU's serialized
+        # scatter-add by ~4x at stress-scale N (the ref backend keeps
+        # the original scatter so the A/B baseline graph is unchanged)
+        nb = m["qdelay_hist"].shape[0]
+        oh = qbin[:, None] == jnp.arange(nb, dtype=I32)[None, :]
+        metrics["qdelay_hist"] = m["qdelay_hist"] + jnp.sum(
+            jnp.where(oh, use_l2_s[:, None].astype(I32), 0), axis=0)
+    else:
+        metrics["qdelay_hist"] = m["qdelay_hist"].at[qbin].add(
+            use_l2_s.astype(I32))
     metrics["qdelay_sum"] = m["qdelay_sum"] + jnp.sum(qdelay)
     metrics["dram_accesses"] = m["dram_accesses"] + jnp.sum(
         go_dram.astype(I32))
     metrics["row_hits"] = m["row_hits"] + jnp.sum(row_hit.astype(I32))
 
-    new_st = st._replace(bank_free=bank_free, cur_row=cur_row,
-                         hp_free=hp_free, lp_free=lp_free, metrics=metrics)
-    new_an = QueueAnchors(
-        bank_ts=_anchor_update(an.bank_ts, bmask, t_s),
-        hp_ts=_anchor_update(an.hp_ts, mask_hp, t_s),
-        hp_sa=_anchor_update(an.hp_sa, mask_hp, t_dram_arr),
-        lp_ts=_anchor_update(an.lp_ts, mask_lp, t_s),
-        lp_sa=_anchor_update(an.lp_sa, mask_lp, t_dram_arr))
+    new_st = st._replace(bank_free=nc.bank_free, cur_row=nc.cur_row,
+                         hp_free=nc.hp_free, lp_free=nc.lp_free,
+                         metrics=metrics)
+    new_an = QueueAnchors(bank_ts=nc.bank_ts, hp_ts=nc.hp_ts,
+                          hp_sa=nc.hp_sa, lp_ts=nc.lp_ts, lp_sa=nc.lp_sa)
     # back to the cache pass's [L, B] layout
     lanes, b = recs[0].shape
     t_done_lb = jnp.swapaxes(t_done.reshape(b, lanes), 0, 1)
@@ -364,18 +366,24 @@ def _timing_pass(st: SimState, an: QueueAnchors, recs,
 
 def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
                   pa: PolicyArrays, *, n_warps: int, lanes: int,
-                  prm: SimParams,
-                  wave_size: Optional[int] = None) -> Dict[str, Any]:
+                  prm: SimParams, wave_size: Optional[int] = None,
+                  scan_backend: str = "auto") -> Dict[str, Any]:
     """One workload × one policy on the wavefront engine. Vmappable.
 
     ``compute_gap`` is a scalar or f32[I]; ``oracle_types`` i32[I, W]
-    (same contract as ``event.simulate_core``)."""
+    (same contract as ``event.simulate_core``). ``scan_backend`` selects
+    the wave-step implementation (``wavefront_scan.BACKENDS``):
+    ``"ref"`` is the pre-fusion path kept as the unfused side of the
+    in-run perf A/B; every other backend is output-identical to it
+    (bitwise for ``"fused"``, the CPU default under ``"auto"``)."""
     n_instr = trace_lines.shape[0]
     B = max(1, min(wave_size or default_wave_size(n_warps), n_warps))
-    # phase 1 (>= B warps active) services B instructions per wave; once
-    # fewer than B warps remain every wave advances all of them, so at
-    # most n_instr further waves finish the tail
+    # wave-count CAP (the while_loop usually exits earlier, see module
+    # docstring): phase 1 (>= B warps active) services B instructions
+    # per wave; once fewer than B warps remain every wave advances all
+    # of them, so at most n_instr further waves finish the tail
     n_waves = -(-n_instr * n_warps // B) + n_instr
+    fused = WSCAN.resolve_backend(scan_backend) != "ref"
     tokens = POL.pcal_tokens(pa, n_warps)
 
     lines_wi = jnp.swapaxes(trace_lines, 0, 1)      # [W, I, L]
@@ -388,14 +396,21 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
     ptr0 = jnp.zeros((n_warps,), I32)
     ratio0 = jnp.zeros((n_instr, n_warps), F32)
 
-    def wave_step(carry, _):
-        st, an, ready, ptr, ratio_t = carry
+    def wave_step(carry):
+        st, an, ready, ptr, ratio_t, k = carry
         active = ptr < n_instr
-        # wave = the B earliest-ready active warps; the stable argsort
-        # leaves slots in chronological order (ties by warp id, like the
-        # event loop's argmin)
-        order = jnp.argsort(jnp.where(active, ready, jnp.inf))
-        w_sel = order[:B].astype(I32)
+        # wave = the B earliest-ready active warps, slots in
+        # chronological order, ties by warp id (the event loop's
+        # argmin). top_k on the negated keys returns exactly the first
+        # B entries of the stable ascending argsort (equal keys by
+        # lower index) at O(W log B) instead of the full O(W log W)
+        # sort — tie-parity is pinned by the differential suite.
+        if fused:
+            w_sel = jax.lax.top_k(
+                jnp.where(active, -ready, _NEG), B)[1].astype(I32)
+        else:
+            order = jnp.argsort(jnp.where(active, ready, jnp.inf))
+            w_sel = order[:B].astype(I32)
         slot_ok = active[w_sel]
         i_sel = ptr[w_sel]
         t0 = ready[w_sel]
@@ -403,19 +418,68 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
         pc_b = pcs_wi[w_sel, i_sel]                  # [B]
         owt_b = oracle_wi[w_sel, i_sel]              # [B]
 
-        def lane_step(s, xs):
-            lane, addr = xs                          # i32[], i32[B]
-            valid = (addr >= 0) & slot_ok
-            t_arr = t0 + lane.astype(F32) * prm.lane_skew
-            return _cache_pass(s, t_arr, w_sel, addr, pc_b, valid, owt_b,
-                               prm, pa, tokens)
+        xs = (jnp.arange(lanes, dtype=I32), jnp.swapaxes(lines_b, 0, 1))
+        if fused:
+            # wave-resident classifier rows: gather once, carry [B]
+            # slices through the lane scan, scatter back once (wave
+            # warp ids are distinct, so nothing else touches the rows
+            # mid-wave — see _observe_vec)
+            clf_b0 = jax.tree.map(lambda a: a[w_sel], st.clf)
+            tokens_b = tokens[w_sel]
 
-        st, recs = jax.lax.scan(
-            lane_step, st,
-            (jnp.arange(lanes, dtype=I32), jnp.swapaxes(lines_b, 0, 1)))
-        st, an, t_done = _timing_pass(st, an, recs, prm)     # [L, B]
+            def lane_step(c, xs):
+                s, cb = c
+                lane, addr = xs                      # i32[], i32[B]
+                valid = (addr >= 0) & slot_ok
+                t_arr = t0 + lane.astype(F32) * prm.lane_skew
+                s, cb, rec = _cache_pass(s, t_arr, w_sel, addr, pc_b,
+                                         valid, owt_b, prm, pa, tokens,
+                                         True, clf_b=cb, tokens_b=tokens_b)
+                return (s, cb), rec
 
-        valid_lb = recs[2]
+            (st, clf_b), recs = jax.lax.scan(lane_step, (st, clf_b0), xs)
+            st = st._replace(clf=jax.tree.map(
+                lambda full, b: full.at[w_sel].set(b), st.clf, clf_b))
+        else:
+            def lane_step(s, xs):
+                lane, addr = xs                      # i32[], i32[B]
+                valid = (addr >= 0) & slot_ok
+                t_arr = t0 + lane.astype(F32) * prm.lane_skew
+                s, _, rec = _cache_pass(s, t_arr, w_sel, addr, pc_b,
+                                        valid, owt_b, prm, pa, tokens,
+                                        False)
+                return s, rec
+
+            st, recs = jax.lax.scan(lane_step, st, xs)
+        st, an, t_done = _timing_pass(st, an, recs, prm, scan_backend)
+
+        (_, _, valid_lb, byp_lb, use_lb, hit_lb, _, vt_lb, ev_lb) = recs
+        if fused:
+            # hoisted write-only bookkeeping: one update per wave
+            # instead of one per lane (integer adds — exact either way)
+            m = st.metrics
+            metrics = dict(m)
+            metrics["l2_accesses"] = m["l2_accesses"] + jnp.sum(
+                use_lb.astype(I32))
+            metrics["l2_hits"] = m["l2_hits"] + jnp.sum(hit_lb.astype(I32))
+            metrics["bypasses"] = m["bypasses"] + jnp.sum(
+                byp_lb.astype(I32))
+            # one-hot over the type bins (victim_type is always a
+            # written label, in range) instead of an [N] scatter-add,
+            # which XLA:CPU serializes per element
+            n_types = m["evictions_by_type"].shape[0]
+            vt_oh = vt_lb.reshape(-1)[:, None] \
+                == jnp.arange(n_types, dtype=I32)[None, :]
+            metrics["evictions_by_type"] = m["evictions_by_type"] + jnp.sum(
+                jnp.where(vt_oh, ev_lb.reshape(-1)[:, None].astype(I32), 0),
+                axis=0)
+            st = st._replace(
+                tot_hits=st.tot_hits.at[w_sel].add(
+                    jnp.sum(hit_lb.astype(I32), axis=0)),
+                tot_acc=st.tot_acc.at[w_sel].add(
+                    jnp.sum(valid_lb.astype(I32), axis=0)),
+                metrics=metrics)
+
         dmax = jnp.max(jnp.where(valid_lb, t_done, -jnp.inf), axis=0)
         dmin = jnp.min(jnp.where(valid_lb, t_done, jnp.inf), axis=0)
         has_req = jnp.isfinite(dmax)
@@ -434,10 +498,15 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
         # Fig 4 snapshot: sampled ratio after each serviced instruction
         ratio_t = ratio_t.at[i_sel, w_ok].set(st.clf.ratio[w_sel],
                                               mode="drop")
-        return (st, an, ready, ptr, ratio_t), None
+        return (st, an, ready, ptr, ratio_t, k + 1)
 
-    (st, _, ready, _, ratio_t), _ = jax.lax.scan(
-        wave_step, (st0, an0, ready0, ptr0, ratio0), None, length=n_waves)
+    def wave_pending(carry):
+        _, _, _, ptr, _, k = carry
+        return (k < n_waves) & jnp.any(ptr < n_instr)
+
+    (st, _, ready, _, ratio_t, _) = jax.lax.while_loop(
+        wave_pending, wave_step,
+        (st0, an0, ready0, ptr0, ratio0, jnp.zeros((), I32)))
 
     return REQ.finalize_outputs(st, ready, ratio_t, compute_gap,
                                 n_instr=n_instr, n_warps=n_warps, prm=prm)

@@ -18,6 +18,7 @@ equal N sequential scalar observes, window resets included.
 import dataclasses
 import functools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -330,3 +331,111 @@ def test_batched_observe_window_resets_fire_identically():
     assert np.all(np.asarray(batched.accesses) == 0)      # window reset
     assert np.all(np.asarray(batched.ratio)
                   == np.asarray([1.0, 0.0, 1.0, 0.0]))    # re-sampled
+
+
+# ---------------------------------------------------------------------------
+# fused scan backend: bitwise-equal to the unfused engine (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def _run_backends(trace, n_warps, lanes, policies, backends, **kw0):
+    args = (jnp.asarray(trace["lines"]), jnp.asarray(trace["pcs"]),
+            jnp.asarray(trace["compute_gap"]))
+    kw = dict(n_warps=n_warps, lanes=lanes, prm=PRM, engine="wavefront",
+              **kw0)
+    if "oracle_wtype" in trace:
+        kw["oracle_types"] = jnp.asarray(trace["oracle_wtype"])
+    outs = {b: simulate_sweep(*args, policies, scan_backend=b, **kw)
+            for b in backends}
+    return {b: {k: np.asarray(v) for k, v in o.items()}
+            for b, o in outs.items()}
+
+
+@pytest.mark.parametrize("workload", WL.WORKLOAD_NAMES)
+def test_fused_backend_bitwise_on_workload_matrix(workload):
+    """scan_backend="fused" (the auto default on CPU) must equal the
+    pre-fusion "ref" path BIT-FOR-BIT on every metric across the full
+    15-workload × 4-policy matrix: the fused timing pass only swaps in
+    exactly-associative primitives, top_k selection is tie-identical to
+    the stable argsort, and the hoisted cache-pass bookkeeping is
+    integer accumulation."""
+    spec = WL.WORKLOADS[workload]
+    tr = WL.generate(spec, seed=0)
+    outs = _run_backends(tr, spec.n_warps, spec.lines_per_instr,
+                         DIFF_POLICIES, ("ref", "fused"))
+    for k in outs["ref"]:
+        assert np.array_equal(outs["ref"][k], outs["fused"][k],
+                              equal_nan=True), k
+
+
+def test_fused_backend_bitwise_on_phased():
+    """Same bitwise claim on a drifting-intensity PHASED trace — the
+    non-dyadic compute_gap schedule is what would expose any rounding
+    difference between the formulations."""
+    spec = TG.PHASED_SPECS["PHASED48"]
+    tr = TG.generate(spec, seed=0)
+    outs = _run_backends(tr, spec.n_warps, spec.lines_per_instr,
+                         (BL.BASELINE, BL.MEDIC), ("ref", "fused"))
+    for k in outs["ref"]:
+        assert np.array_equal(outs["ref"][k], outs["fused"][k],
+                              equal_nan=True), k
+
+
+def test_fused_backend_bitwise_wave_of_one():
+    """exact=True corner: a wave of one warp uses the plain busy-until
+    floor; the fused gathered floor must stay bitwise there too."""
+    spec = WL.WORKLOADS["BP"]
+    tr = WL.generate(spec, seed=0)
+    outs = _run_backends(tr, spec.n_warps, spec.lines_per_instr,
+                         (BL.MEDIC,), ("ref", "fused"), wave_size=1)
+    for k in outs["ref"]:
+        assert np.array_equal(outs["ref"][k], outs["fused"][k],
+                              equal_nan=True), k
+
+
+def test_pallas_backend_close_at_engine_level():
+    """scan_backend="pallas" (interpret-forced on CPU) through the whole
+    engine: chunk re-association may round non-dyadic floats, so the
+    claim is allclose, not bitwise. Kept tiny — interpret mode runs the
+    kernel chunk loop in Python."""
+    spec = dataclasses.replace(
+        TG.TraceSpec.from_workload(WL.WORKLOADS["BFS"]),
+        n_warps=12, n_instr=8)
+    tr = TG.generate(spec, seed=0)
+    outs = _run_backends(tr, spec.n_warps, spec.lines_per_instr,
+                         (BL.MEDIC,), ("ref", "pallas"))
+    for k in outs["ref"]:
+        np.testing.assert_allclose(outs["pallas"][k], outs["ref"][k],
+                                   rtol=1e-5, atol=1e-5, err_msg=k)
+
+
+def test_topk_selection_ties_match_stable_argsort():
+    """The fused wave selection: `top_k(-ready)` must break equal-ready
+    ties exactly like the stable ascending argsort (lower warp id wins)
+    — fuzzed over heavily-tied readiness vectors."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        w = int(rng.integers(2, 200))
+        b = int(rng.integers(1, w + 1))
+        # few distinct values => many ties
+        ready = rng.choice(rng.uniform(0, 10, 3), size=w)
+        active = rng.random(w) < 0.8
+        r = jnp.asarray(ready, jnp.float32)
+        a = jnp.asarray(active)
+        ref = np.argsort(np.where(active, ready, np.inf),
+                         kind="stable")[:b]
+        got = np.asarray(
+            jax.lax.top_k(jnp.where(a, -r, -jnp.inf), b)[1])
+        assert np.array_equal(ref, got), (w, b, ready, active)
+
+
+def test_scan_backend_validation():
+    spec = WL.WORKLOADS["BP"]
+    tr = WL.generate(spec, seed=0)
+    args = (jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+            jnp.asarray(tr["compute_gap"]))
+    kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM,
+              pol=BL.MEDIC)
+    with pytest.raises(ValueError, match="scan_backend"):
+        simulate(*args, engine="wavefront", scan_backend="vector9", **kw)
+    with pytest.raises(ValueError, match="only meaningful"):
+        simulate(*args, engine="event", scan_backend="fused", **kw)

@@ -164,3 +164,187 @@ def test_mlstm_chunkwise_matches_recurrent():
                                rtol=5e-3)
     np.testing.assert_allclose(np.asarray(st1[0]), np.asarray(st2[0]),
                                atol=5e-4, rtol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# wavefront segmented queue recovery
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_WS_KW = dict(banks=8, channels=4, l2_svc=4.0, l2_lat=20.0,
+              occ_rowhit=4.0, occ_rowmiss=10.0)
+
+
+def _wave_case(rng, n, dyadic=True, empty=False, banks=8, channels=4,
+               warm_carry=True):
+    """One fuzzed wave: sorted arrivals, random queue membership, random
+    cross-wave carry (some queues never-touched: -inf anchors)."""
+    step = 0.25 if dyadic else 0.7
+    t_s = jnp.asarray(np.cumsum(rng.integers(0, 4, n)) * step, jnp.float32)
+    bank = jnp.asarray(rng.integers(0, banks, n), jnp.int32)
+    ch = jnp.asarray(rng.integers(0, channels, n), jnp.int32)
+    row = jnp.asarray(rng.integers(0, 6, n), jnp.int32)
+    if empty:
+        valid = np.zeros(n, bool)
+    else:
+        valid = rng.random(n) < 0.9
+    byp = (rng.random(n) < 0.2) & valid
+    hit = (rng.random(n) < 0.4) & valid & ~byp
+    use_l2 = jnp.asarray(valid & ~byp)
+    go_dram = jnp.asarray(valid & (byp | ~hit))
+    hp = jnp.asarray(rng.random(n) < 0.5)
+
+    def qvec(q, lo, hi):
+        return jnp.asarray(rng.uniform(lo, hi, q) * (4 if dyadic else 1),
+                           jnp.float32)
+    neg = jnp.asarray(np.where(rng.random(channels) < 0.3, -np.inf, 0.0),
+                      jnp.float32)
+    negb = jnp.asarray(np.where(rng.random(banks) < 0.3, -np.inf, 0.0),
+                       jnp.float32)
+    if not warm_carry:
+        negb = jnp.full((banks,), -jnp.inf)
+        neg = jnp.full((channels,), -jnp.inf)
+    from repro.kernels.wavefront_scan.ref import QueueCarry
+    carry = QueueCarry(
+        bank_free=qvec(banks, 0, 30), bank_ts=qvec(banks, 0, 20) + negb,
+        hp_free=qvec(channels, 0, 40), hp_ts=qvec(channels, 0, 20) + neg,
+        hp_sa=qvec(channels, 0, 20) + neg,
+        lp_free=qvec(channels, 0, 40), lp_ts=qvec(channels, 0, 20) + neg,
+        lp_sa=qvec(channels, 0, 20) + neg,
+        cur_row=jnp.asarray(rng.integers(-1, 6, channels), jnp.int32))
+    return (t_s, bank, use_l2, ch, row, go_dram, jnp.asarray(byp), hp,
+            carry)
+
+
+def _recover(args, backend, exact=False, interpret=True):
+    from repro.kernels.wavefront_scan.ops import wave_queue_recovery
+    return wave_queue_recovery(*args, exact=exact, backend=backend,
+                               interpret=interpret, **_WS_KW)
+
+
+def _assert_wave_equal(a, b, slots_exactly=True, go_dram=None):
+    """Compare (t_head, t0, row_hit, carry) across backends. ``t0`` is
+    compared only where the contract defines it (``go_dram`` slots)."""
+    ta, t0a, rha, ca = a
+    tb, t0b, rhb, cb = b
+    np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+    gd = np.asarray(go_dram) if go_dram is not None else \
+        np.ones(np.asarray(t0a).shape, bool)
+    np.testing.assert_array_equal(np.asarray(t0a)[gd], np.asarray(t0b)[gd])
+    np.testing.assert_array_equal(np.asarray(rha), np.asarray(rhb))
+    for f, va, vb in zip(ca._fields, ca, cb):
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                      err_msg=f"carry field {f}")
+
+
+@pytest.mark.parametrize("dyadic", [True, False])
+@pytest.mark.parametrize("n", [1, 3, 17, 96, 256, 600])
+def test_wavefront_scan_fused_bitwise(n, dyadic):
+    """The fused slot-major path is bit-for-bit equal to the unfused
+    oracle — including on non-dyadic floats (same elementwise ops on the
+    same values; max exactly associative; integer-valued cumsums exact),
+    which is what lets the engine default to it under 1e-6 goldens."""
+    rng = np.random.default_rng(n * 2 + dyadic)
+    args = _wave_case(rng, n, dyadic=dyadic)
+    _assert_wave_equal(_recover(args, "ref"), _recover(args, "fused"),
+                       go_dram=args[5])
+
+
+@pytest.mark.parametrize("exact", [True, False])
+def test_wavefront_scan_fused_bitwise_exact_mode(exact):
+    """Both carry-floor modes (plain busy-until vs backlog interp)."""
+    rng = np.random.default_rng(7)
+    args = _wave_case(rng, 64, dyadic=False)
+    _assert_wave_equal(_recover(args, "ref", exact=exact),
+                       _recover(args, "fused", exact=exact),
+                       go_dram=args[5])
+
+
+@pytest.mark.parametrize("n", [1, 5, 96, 256, 600, 1024])
+def test_wavefront_scan_pallas_interpret(n):
+    """The chunked Pallas kernel (interpret mode on CPU) is exactly
+    equal on dyadic inputs — the chunk re-association of the prefix sums
+    is exact on integer-valued occupancies — across single- and
+    multi-chunk sizes (chunk = 256)."""
+    rng = np.random.default_rng(n)
+    args = _wave_case(rng, n, dyadic=True)
+    _assert_wave_equal(_recover(args, "ref"),
+                       _recover(args, "pallas", interpret=True),
+                       go_dram=args[5])
+
+
+def test_wavefront_scan_pallas_nondyadic_close():
+    """Non-dyadic inputs: chunk re-association may round differently, so
+    the kernel is allclose, not bitwise."""
+    rng = np.random.default_rng(11)
+    args = _wave_case(rng, 600, dyadic=False)
+    tr, t0r, rhr, cr = _recover(args, "ref")
+    tp, t0p, rhp, cp = _recover(args, "pallas", interpret=True)
+    gd = np.asarray(args[5])
+    np.testing.assert_allclose(np.asarray(tr), np.asarray(tp), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(t0r)[gd], np.asarray(t0p)[gd],
+                               atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(rhr), np.asarray(rhp))
+
+
+@pytest.mark.parametrize("backend", ["fused", "pallas"])
+def test_wavefront_scan_empty_wave(backend):
+    """A wave with no valid slot is a no-op: the carry round-trips
+    bitwise (this is what makes the engine's early-exit while_loop
+    byte-identical to running the dead tail waves)."""
+    rng = np.random.default_rng(13)
+    args = _wave_case(rng, 48, dyadic=False, empty=True)
+    ref = _recover(args, "ref")
+    out = _recover(args, backend)
+    _assert_wave_equal(ref, out, go_dram=args[5])
+    for f, va, vb in zip(ref[3]._fields, args[8], out[3]):
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                      err_msg=f"carry field {f} changed "
+                                              "on an empty wave")
+
+
+@pytest.mark.parametrize("backend", ["fused", "pallas"])
+def test_wavefront_scan_single_slot(backend):
+    """n=1 waves (single-slot: one warp, one lane) across every request
+    species: L2-only, DRAM hp, DRAM lp, bypass-direct."""
+    from repro.kernels.wavefront_scan.ref import QueueCarry
+    rng = np.random.default_rng(17)
+    base = _wave_case(rng, 1, dyadic=False)
+    for use, go, byp, hp in [(True, False, False, False),
+                             (True, True, False, True),
+                             (True, True, False, False),
+                             (False, True, True, True)]:
+        args = (base[0], base[1], jnp.asarray([use]), base[3], base[4],
+                jnp.asarray([go]), jnp.asarray([byp]), jnp.asarray([hp]),
+                base[8])
+        _assert_wave_equal(_recover(args, "ref"), _recover(args, backend),
+                           go_dram=args[5])
+
+
+def test_wavefront_scan_cold_carry():
+    """All-virgin queues (-inf anchors, as at t=0) don't poison the
+    fused path's gathered floors."""
+    rng = np.random.default_rng(23)
+    args = _wave_case(rng, 96, dyadic=False, warm_carry=False)
+    _assert_wave_equal(_recover(args, "ref"), _recover(args, "fused"),
+                       go_dram=args[5])
+    _assert_wave_equal(_recover(args, "ref"), _recover(args, "pallas"),
+                       go_dram=args[5])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(n=hyp_st.integers(1, 300), seed=hyp_st.integers(0, 2**31),
+           dyadic=hyp_st.booleans(), empty=hyp_st.booleans())
+    def test_wavefront_scan_fused_hypothesis(n, seed, dyadic, empty):
+        """Fuzz mask patterns (incl. empty queues / single-slot waves):
+        fused stays bitwise-equal to the oracle."""
+        rng = np.random.default_rng(seed)
+        args = _wave_case(rng, n, dyadic=dyadic, empty=empty)
+        _assert_wave_equal(_recover(args, "ref"), _recover(args, "fused"),
+                           go_dram=args[5])

@@ -16,6 +16,16 @@ recovers; ``1 - closure`` is the reclassification lag's cost. The
 acceptance floor (closure ≥ 0.5 on at least one PHASED_* spec) is
 asserted in-test (tests/test_golden_phased.py), NOT on wall-clock —
 container timing is too noisy to gate on.
+
+Since PR 7 the suite reports closure **per drift direction**: the
+degrading ``PHASED_*`` specs (hit → miss, the PR 5 family) and the
+recovery-shaped ``PHASED_RECOVER_*`` mirror (miss → hit), whose derived
+keys carry a ``_recover`` suffix (``closure_recover[...]``,
+``best_closure_recover``). The recovery direction is the one the
+probe-ratchet fix unlocked: online labels must ratchet back UP off the
+cache-path probe sample, which the pre-PR 7 classifier could not do.
+Both directions run in ONE experiment (shared trace shapes bucket into
+the same jitted calls, so ``n_calls`` stays at one per shape).
 """
 from __future__ import annotations
 
@@ -41,37 +51,50 @@ def gap_closure(ipc_stale: float, ipc_online: float,
 
 
 def phased_gap(quick: bool = True) -> Tuple[List[dict], Dict]:
-    exp = registry.PAPER_PHASED_QUICK if quick else registry.PAPER_PHASED
+    from repro.api.experiment import Experiment
+    deg = registry.PAPER_PHASED_QUICK if quick else registry.PAPER_PHASED
+    rec = registry.PAPER_RECOVER_QUICK if quick else registry.PAPER_RECOVER
+    # both drift directions in ONE experiment: a PHASED_* spec and its
+    # PHASED_RECOVER_* mirror share the trace shape, so the plan
+    # compiler buckets them into the same jitted calls — n_calls stays
+    # at one per shape, same as the degrade-only suite
+    exp = Experiment(deg.name, deg.scenarios + rec.scenarios,
+                     deg.policies, engine=deg.engine)
     t0 = time.perf_counter()
     rs = exp.run()
     wall = time.perf_counter() - t0
 
     rows: List[dict] = []
     derived: Dict[str, float] = {}
-    closures: List[float] = []
-    scenarios = [s.name for s in exp.scenarios]
-    for scen in scenarios:
+    closures: Dict[str, List[float]] = {"": [], "_recover": []}
+    recover_names = {s.name for s in rec.scenarios}
+    for scen in [s.name for s in exp.scenarios]:
+        direction = "_recover" if scen in recover_names else ""
         ipc = {pol.name: float(np.asarray(
             rs.value("ipc", scenario=scen, policy=pol.name, seed=0)))
             for pol in exp.policies}
         for pol, v in ipc.items():
             rows.append({"scenario": scen, "policy": pol,
                          "ipc": round(v, 6)})
-        closures += [gap_closure(ipc[STALE], ipc[ONLINE], ipc[ORACLE]),
-                     gap_closure(ipc[STALE], ipc[FAST], ipc[ORACLE])]
-        derived[f"closure[{scen}]"] = round(closures[-2], 4)
-        derived[f"closure_fast[{scen}]"] = round(closures[-1], 4)
+        closures[direction] += [
+            gap_closure(ipc[STALE], ipc[ONLINE], ipc[ORACLE]),
+            gap_closure(ipc[STALE], ipc[FAST], ipc[ORACLE])]
+        derived[f"closure[{scen}]"] = round(closures[direction][-2], 4)
+        derived[f"closure_fast[{scen}]"] = round(closures[direction][-1], 4)
         derived[f"oracle_over_stale[{scen}]"] = round(
             ipc[ORACLE] / ipc[STALE], 4)
         derived[f"online_over_stale[{scen}]"] = round(
             ipc[ONLINE] / ipc[STALE], 4)
     # an online (non-oracle, non-stale) labeling's best recovery of the
-    # stale->oracle gap anywhere in the suite — the ISSUE 5 floor.
+    # stale->oracle gap anywhere in the suite, PER DRIFT DIRECTION —
+    # ``best_closure`` is the ISSUE 5 floor (degrading drift),
+    # ``best_closure_recover`` the ISSUE 7 floor (recovery drift).
     # NaN closures (a degenerate oracle==stale tie) must not poison the
-    # max, hence nanmax over the finite entries
-    finite = [c for c in closures if np.isfinite(c)]
-    derived["best_closure"] = round(max(finite), 4) if finite \
-        else float("nan")
+    # max, hence the max over finite entries only
+    for direction, cs in closures.items():
+        finite = [c for c in cs if np.isfinite(c)]
+        derived[f"best_closure{direction}"] = round(max(finite), 4) \
+            if finite else float("nan")
     derived["suite_wall_s"] = round(wall, 2)
     derived["n_calls"] = rs.meta["n_calls"]
     return rows, derived

@@ -85,8 +85,9 @@ def main() -> None:
         # shape bucket with more scenarios
         "api_overhead": lambda: api_bench.api_overhead(quick=True),
         # reclassification-lag vs oblivious-static-label IPC gap on the
-        # drifting-regime PHASED_* specs (quick: 48+256 warps; full adds
-        # the 1k/2k sizes)
+        # drifting-regime specs, both directions: degrading PHASED_* +
+        # recovery-shaped PHASED_RECOVER_* (quick: 48+256 warps; full
+        # adds the 1k/2k sizes)
         "phased_gap": lambda: phased_bench.phased_gap(quick=args.quick),
         "serving_ab": serving_ab.serving_ab,
         "kernel_micro": kernel_micro.kernel_micro,

@@ -42,6 +42,7 @@ PHASED_POLICIES: Tuple[Policy, ...] = BL.LABELING_LADDER
 
 QUICK_WORKLOADS: Tuple[str, ...] = ("BFS", "SSSP", "BP", "CONS")
 QUICK_PHASED: Tuple[str, ...] = ("PHASED48", "PHASED256")
+QUICK_RECOVER: Tuple[str, ...] = ("PHASED_RECOVER48", "PHASED_RECOVER256")
 
 
 def paper_fig7(workloads=WL.WORKLOAD_NAMES, seeds=(0,),
@@ -80,15 +81,32 @@ def phased(scenarios=tuple(TG.PHASED_SPECS), seeds=(0,),
         PHASED_POLICIES, engine=engine)
 
 
+def recover(scenarios=tuple(TG.PHASED_RECOVER_SPECS), seeds=(0,),
+            engine: str = "wavefront", name: str = "paper_recover"
+            ) -> Experiment:
+    """The recovery-direction mirror of ``phased``: PHASED_RECOVER_*
+    scenarios (miss -> mixed -> hit drift) × the same labeling ladder.
+    Only meaningful since the PR 7 probe-ratchet fix — before it, online
+    labels could not follow warps back up, so online degenerated to
+    stale in this direction."""
+    return Experiment(
+        name,
+        tuple(Scenario.phased(s, seeds=seeds) for s in scenarios),
+        PHASED_POLICIES, engine=engine)
+
+
 PAPER_FIG7 = paper_fig7()
 PAPER_FIG7_QUICK = paper_fig7(QUICK_WORKLOADS, name="paper_fig7_quick")
 STRESS = stress()
 PAPER_PHASED = phased()
 PAPER_PHASED_QUICK = phased(QUICK_PHASED, name="paper_phased_quick")
+PAPER_RECOVER = recover()
+PAPER_RECOVER_QUICK = recover(QUICK_RECOVER, name="paper_recover_quick")
 
 EXPERIMENTS: Dict[str, Experiment] = {
     e.name: e for e in (PAPER_FIG7, PAPER_FIG7_QUICK, STRESS,
-                        PAPER_PHASED, PAPER_PHASED_QUICK)}
+                        PAPER_PHASED, PAPER_PHASED_QUICK,
+                        PAPER_RECOVER, PAPER_RECOVER_QUICK)}
 
 
 def get(name: str) -> Experiment:

@@ -17,11 +17,31 @@ follows the EAF generation-bump idiom: ``windows`` counts completed
 windows per warp and label updates are gated on it, instead of keeping a
 separate frozen-label array.
 
-Bypassed requests are counted as *misses* (they would have been: the warp
-was classified mostly/all-miss). To let a reformed warp escape the bypass
-class, a small fraction of bypassed requests is still probed through the
-cache lookup path (``probe_interval``), mirroring the paper's periodic
-resampling discussion.
+Under a bypass policy most of a bypassing warp's requests never touch the
+cache, so they carry no hit/miss evidence. The classifier therefore keeps
+TWO per-window counters: ``accesses`` counts every valid request (the
+window/probe *cadence* clock — it must keep ticking while a warp
+bypasses, or the probe phase would never come around again), while
+``sampled`` counts only the requests that actually took the cache path
+(non-bypassed requests plus the periodic probes — every
+``probe_interval``-th access of a bypassing warp is forced down the
+cache path by the engines). The classified hit ratio is
+``hits / sampled``: the undiluted cache-path sample. Before PR 7 the
+ratio was ``hits / accesses``, which capped a bypassing warp's
+observable ratio at ``1/probe_interval`` = 0.125 < the 0.2 mostly-miss
+threshold — labels ratcheted down and could never recover (the bug
+DESIGN.md §11 kept on record since PR 5). With the probe-sample window a
+reformed warp's probe stream can exceed the 0.8 mostly-hit threshold
+and the label ratchets back up.
+
+``min_samples`` adapts to the probe cadence: a window of
+``sampling_interval`` accesses guarantees only ``interval /
+probe_interval`` cache-path samples for a fully-bypassing warp, so the
+classify floor is ``clip(interval / probe_interval, 1, 8)`` — small
+windows (e.g. the win-32 fast ladder rung) would otherwise never reach
+8 probes and oscillate through BALANCED every window. A window that
+closes with NO cache-path sample at all (e.g. a token-less PCAL warp)
+relabels to BALANCED: no evidence reverts to the prior.
 
 Everything is functional and vectorized over warps so both the altitude-A
 simulator and the altitude-B serving pool manager use the same code.
@@ -37,11 +57,14 @@ from repro.core import warp_types as WT
 
 
 class ClassifierState(NamedTuple):
-    hits: jnp.ndarray        # i32[W] hits in current sampling window
-    accesses: jnp.ndarray    # i32[W] accesses in current sampling window
+    hits: jnp.ndarray        # i32[W] cache-path hits in current window
+    accesses: jnp.ndarray    # i32[W] ALL valid requests in current window
+    #                          (window + probe cadence clock)
     warp_type: jnp.ndarray   # i32[W] current classification
-    ratio: jnp.ndarray       # f32[W] last sampled hit ratio
+    ratio: jnp.ndarray       # f32[W] last sampled cache-path hit ratio
     windows: jnp.ndarray     # i32[W] completed sampling windows
+    sampled: jnp.ndarray     # i32[W] cache-path requests in current window
+    #                          (non-bypassed + probes; the classify sample)
 
 
 def init(n_warps: int) -> ClassifierState:
@@ -51,14 +74,27 @@ def init(n_warps: int) -> ClassifierState:
         warp_type=jnp.full((n_warps,), WT.BALANCED, jnp.int32),
         ratio=jnp.full((n_warps,), 0.5, jnp.float32),
         windows=jnp.zeros((n_warps,), jnp.int32),
+        sampled=jnp.zeros((n_warps,), jnp.int32),
     )
+
+
+def min_probe_samples(sampling_interval, probe_interval):
+    """Classify floor adapted to the probe cadence: a window of
+    ``sampling_interval`` accesses guarantees only ``interval /
+    probe_interval`` cache-path samples for a fully-bypassing warp.
+    Shared by ``observe`` and the wavefront engine's fused observe
+    variants so the three observe paths cannot desynchronize."""
+    guaranteed = jnp.asarray(sampling_interval, jnp.float32) // jnp.maximum(
+        jnp.asarray(probe_interval, jnp.float32), 1.0)
+    return jnp.clip(guaranteed, 1.0, 8.0)
 
 
 def observe(state: ClassifierState, warp_id, is_hit, *,
             sampling_interval=256,
             mostly_hit_threshold: float = 0.8,
             mostly_miss_threshold: float = 0.2,
-            weight=None, max_windows=None) -> ClassifierState:
+            weight=None, max_windows=None, probed=None,
+            probe_interval=None) -> ClassifierState:
     """Record one (or a batch of) access outcome(s) and re-classify any warp
     whose sampling window filled up.
 
@@ -67,19 +103,35 @@ def observe(state: ClassifierState, warp_id, is_hit, *,
     max_windows (optional, traced ok): label updates stop after this many
     completed windows — the window still resets (counters keep cycling,
     ``ratio`` telemetry stays live), only ``warp_type`` freezes.
+    probed (optional): i32 mask/weight of requests that took the cache
+    path (non-bypassed + periodic probes). Defaults to ``weight`` (every
+    counted request is a cache-path sample — the non-bypass case).
+    Requests with ``probed == 0`` still advance the ``accesses`` cadence
+    clock but carry no hit/miss evidence: the classified ratio is
+    ``hits / sampled`` over cache-path samples only, so a bypassing
+    warp's ratio is NOT diluted toward ``1/probe_interval``.
+    probe_interval (optional, traced ok): the probe cadence, used only
+    to adapt the classify floor (``min_probe_samples``); None keeps the
+    default floor of 8 samples.
     """
     warp_id = jnp.atleast_1d(warp_id)
     is_hit = jnp.atleast_1d(is_hit).astype(jnp.int32)
     if weight is None:
         weight = jnp.ones_like(is_hit)
-    hits = state.hits.at[warp_id].add(is_hit * weight)
+    if probed is None:
+        probed = weight
+    hits = state.hits.at[warp_id].add(is_hit * probed)
     accesses = state.accesses.at[warp_id].add(weight)
+    sampled = state.sampled.at[warp_id].add(probed)
 
     due = accesses >= sampling_interval
-    ratio_now = hits.astype(jnp.float32) / jnp.maximum(accesses, 1)
-    new_type = WT.classify(ratio_now, accesses,
+    ratio_now = hits.astype(jnp.float32) / jnp.maximum(sampled, 1)
+    min_samples = 8 if probe_interval is None \
+        else min_probe_samples(sampling_interval, probe_interval)
+    new_type = WT.classify(ratio_now, sampled,
                            mostly_hit_threshold=mostly_hit_threshold,
-                           mostly_miss_threshold=mostly_miss_threshold)
+                           mostly_miss_threshold=mostly_miss_threshold,
+                           min_samples=min_samples)
     relabel = due if max_windows is None \
         else due & (state.windows < max_windows)
     warp_type = jnp.where(relabel, new_type, state.warp_type)
@@ -87,21 +139,24 @@ def observe(state: ClassifierState, warp_id, is_hit, *,
     windows = state.windows + due.astype(jnp.int32)
     hits = jnp.where(due, 0, hits)
     accesses = jnp.where(due, 0, accesses)
-    return ClassifierState(hits, accesses, warp_type, ratio, windows)
+    sampled = jnp.where(due, 0, sampled)
+    return ClassifierState(hits=hits, accesses=accesses,
+                           warp_type=warp_type, ratio=ratio,
+                           windows=windows, sampled=sampled)
 
 
 def force_classify(state: ClassifierState, *, mostly_hit_threshold=0.8,
                    mostly_miss_threshold=0.2, min_samples: int = 1
                    ) -> ClassifierState:
     """Classify immediately from whatever counts exist (end-of-window)."""
-    ratio_now = state.hits.astype(jnp.float32) / jnp.maximum(state.accesses, 1)
-    new_type = WT.classify(ratio_now, state.accesses,
+    ratio_now = state.hits.astype(jnp.float32) / jnp.maximum(state.sampled, 1)
+    new_type = WT.classify(ratio_now, state.sampled,
                            mostly_hit_threshold=mostly_hit_threshold,
                            mostly_miss_threshold=mostly_miss_threshold,
                            min_samples=min_samples)
-    keep = state.accesses < min_samples
+    keep = state.sampled < min_samples
     return ClassifierState(
-        state.hits, state.accesses,
-        jnp.where(keep, state.warp_type, new_type),
-        jnp.where(keep, state.ratio, ratio_now),
-        state.windows)
+        hits=state.hits, accesses=state.accesses,
+        warp_type=jnp.where(keep, state.warp_type, new_type),
+        ratio=jnp.where(keep, state.ratio, ratio_now),
+        windows=state.windows, sampled=state.sampled)

@@ -102,16 +102,22 @@ def _request_step(st: SimState, req, prm: SimParams, pa: PolicyArrays,
     t_done = jnp.where(valid, t_done, t_arr)
 
     # ---- ① classifier + PC table + lifetime counters ------------------------
-    # sampling window and label-freeze cap are policy-visible knobs
+    # sampling window, probe cadence and label-freeze cap are
+    # policy-visible knobs; ``probed`` marks the cache-path requests so
+    # the window ratio is measured over the undiluted probe sample
     clf = CLF.observe(st.clf, w, hit,
                       sampling_interval=POL.reclass_interval(
                           pa, prm.sampling_interval),
                       mostly_hit_threshold=prm.mostly_hit_threshold,
                       mostly_miss_threshold=prm.mostly_miss_threshold,
                       weight=jnp.atleast_1d(valid.astype(I32)),
-                      max_windows=POL.reclass_max_windows(pa))
+                      max_windows=POL.reclass_max_windows(pa),
+                      probed=jnp.atleast_1d(use_l2.astype(I32)),
+                      probe_interval=POL.probe_interval(
+                          pa, prm.probe_interval))
     pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
     pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
+    pc_req = st.pc_req.at[pidx].add(valid.astype(I32))
     tot_hits = st.tot_hits.at[w].add(hit.astype(I32))
     tot_acc = st.tot_acc.at[w].add(valid.astype(I32))
 
@@ -132,7 +138,7 @@ def _request_step(st: SimState, req, prm: SimParams, pa: PolicyArrays,
         tags=tags, rrip=rrip, meta_type=meta_type, bank_free=bank_free,
         cur_row=cur_row, hp_free=hp_free, lp_free=lp_free, clf=clf,
         eaf=eaf, eaf_gen=eaf_gen, eaf_ctr=eaf_ctr, pc_hits=pc_hits,
-        pc_acc=pc_acc, tot_hits=tot_hits, tot_acc=tot_acc,
+        pc_acc=pc_acc, pc_req=pc_req, tot_hits=tot_hits, tot_acc=tot_acc,
         metrics=metrics)
     return new_st, t_done
 

@@ -67,12 +67,20 @@ def bypass_decision_vals(warp_type_w, accesses_w, token_w, st: SimState,
     """
     wtype = POL.select_label(pa, warp_type_w, oracle_wt)
     pidx = pc_index(pc, prm)
-    probe = (accesses_w % 8) == 0
+    # periodic re-learning probe: the Nth access of each probe window
+    # (cadence ``accesses``, which counts ALL valid requests, so it
+    # keeps ticking while the warp bypasses) is forced down the cache
+    # path. ``% pi == pi - 1`` — not ``== 0``, which would fire on a
+    # warp's zeroth access instead of its Nth. The cadence is the traced
+    # ``PolicyArrays.probe_interval`` (0 defers to SimParams).
+    pi = POL.probe_interval(pa, prm.probe_interval).astype(I32)
+    probe = (accesses_w % pi) == pi - 1
     rand_u = hash_index(addr, 7, 65536).astype(F32) / 65536.0
     byp = POL.bypass_decision(pa, wtype=wtype, probe=probe,
                               token_bit=token_w,
                               pc_hits=st.pc_hits[pidx],
-                              pc_acc=st.pc_acc[pidx], rand_u=rand_u)
+                              pc_acc=st.pc_acc[pidx],
+                              pc_req=st.pc_req[pidx], rand_u=rand_u)
     return byp & valid, wtype, pidx
 
 
@@ -85,8 +93,11 @@ def bypass_decision(st: SimState, w, addr, pc, valid, prm: SimParams,
     (①) selects between it and the online classifier's label, so one
     vmapped sweep can compare oracle / online / stale labelings.
 
-    Periodic probe so a reformed warp can be re-learned: every 8th access
-    of a bypassing warp still takes the cache path.
+    Periodic probe so a reformed warp can be re-learned: every
+    ``probe_interval``-th access of a bypassing warp still takes the
+    cache path, and the classifier's window ratio is measured over that
+    cache-path sample only (``classifier.observe``'s ``probed`` mask) —
+    an undiluted probe stream is what lets a label ratchet back UP.
     """
     return bypass_decision_vals(st.clf.warp_type[w], st.clf.accesses[w],
                                 tokens[w], st, addr, pc, valid, prm, pa,

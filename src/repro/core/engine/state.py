@@ -42,6 +42,10 @@ class SimParams:
     eaf_capacity: int = 1024   # filter reset period (insertions)
     pc_entries: int = 256
     sampling_interval: int = 64
+    # classifier probe cadence: every Nth access of a bypassing warp is
+    # forced down the cache path (the default when the policy's traced
+    # ``PolicyArrays.probe_interval`` is 0 — see ``POL.probe_interval``)
+    probe_interval: int = 8
     mostly_hit_threshold: float = 0.8
     mostly_miss_threshold: float = 0.2
     # energy model (relative units, GPUWattch-flavoured)
@@ -65,8 +69,13 @@ class SimState(NamedTuple):
     #                            reset is a generation bump, not a (costly
     #                            per-step) array clear
     eaf_ctr: jnp.ndarray       # i32[] insertions since reset
-    pc_hits: jnp.ndarray       # i32[pc_entries]
-    pc_acc: jnp.ndarray        # i32[pc_entries]
+    pc_hits: jnp.ndarray       # i32[pc_entries] cache-path hits
+    pc_acc: jnp.ndarray        # i32[pc_entries] cache-path accesses
+    pc_req: jnp.ndarray        # i32[pc_entries] ALL valid requests — the
+    #                            PC-probe cadence clock. pc_acc freezes
+    #                            while a PC bypasses, so gating the probe
+    #                            on it would never fire again (the PR 7
+    #                            ratchet audit); pc_req keeps ticking.
     tot_hits: jnp.ndarray      # i32[W] lifetime counters (never reset)
     tot_acc: jnp.ndarray       # i32[W]
     metrics: Dict[str, jnp.ndarray]
@@ -103,6 +112,7 @@ def init_state(n_warps: int, prm: SimParams) -> SimState:
         eaf_ctr=jnp.zeros((), I32),
         pc_hits=jnp.zeros((prm.pc_entries,), I32),
         pc_acc=jnp.zeros((prm.pc_entries,), I32),
+        pc_req=jnp.zeros((prm.pc_entries,), I32),
         tot_hits=jnp.zeros((n_warps,), I32),
         tot_acc=jnp.zeros((n_warps,), I32),
         metrics=metrics,

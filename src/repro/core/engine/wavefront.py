@@ -95,7 +95,7 @@ def default_wave_size(n_warps: int) -> int:
     return max(min(n_warps, 8), n_warps // 6)
 
 
-def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight,
+def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight, probed,
                       prm: SimParams, pa: PolicyArrays
                       ) -> CLF.ClassifierState:
     """``classifier.observe`` restricted to the B touched warps.
@@ -107,18 +107,24 @@ def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight,
     Wave warp ids are distinct, so the scatters don't collide. Parity
     with `CLF.observe` is pinned by tests/test_engine_differential.py.
 
-    The sampling window and label-freeze cap come from the policy
-    (①, same knobs the event engine passes to ``CLF.observe``).
+    The sampling window, probe cadence and label-freeze cap come from
+    the policy (①, same knobs the event engine passes to
+    ``CLF.observe``); ``probed`` marks the cache-path requests whose
+    undiluted sample the window ratio is measured over.
     """
     interval = POL.reclass_interval(pa, prm.sampling_interval)
     max_windows = POL.reclass_max_windows(pa)
-    hits = clf.hits[w] + is_hit.astype(I32) * weight
+    min_samples = CLF.min_probe_samples(
+        interval, POL.probe_interval(pa, prm.probe_interval))
+    hits = clf.hits[w] + is_hit.astype(I32) * probed
     accesses = clf.accesses[w] + weight
+    sampled = clf.sampled[w] + probed
     due = accesses >= interval
-    ratio_now = hits.astype(jnp.float32) / jnp.maximum(accesses, 1)
-    new_type = WT.classify(ratio_now, accesses,
+    ratio_now = hits.astype(jnp.float32) / jnp.maximum(sampled, 1)
+    new_type = WT.classify(ratio_now, sampled,
                            mostly_hit_threshold=prm.mostly_hit_threshold,
-                           mostly_miss_threshold=prm.mostly_miss_threshold)
+                           mostly_miss_threshold=prm.mostly_miss_threshold,
+                           min_samples=min_samples)
     relabel = due & (clf.windows[w] < max_windows)
     return CLF.ClassifierState(
         hits=clf.hits.at[w].set(jnp.where(due, 0, hits)),
@@ -127,10 +133,11 @@ def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight,
             jnp.where(relabel, new_type, clf.warp_type[w])),
         ratio=clf.ratio.at[w].set(jnp.where(due, ratio_now, clf.ratio[w])),
         windows=clf.windows.at[w].add(due.astype(I32)),
+        sampled=clf.sampled.at[w].set(jnp.where(due, 0, sampled)),
     )
 
 
-def _observe_vec(clf_b: CLF.ClassifierState, is_hit, weight,
+def _observe_vec(clf_b: CLF.ClassifierState, is_hit, weight, probed,
                  prm: SimParams, pa: PolicyArrays) -> CLF.ClassifierState:
     """``_observe_gathered`` on wave-resident [B] counter slices.
 
@@ -144,20 +151,25 @@ def _observe_vec(clf_b: CLF.ClassifierState, is_hit, weight,
     have."""
     interval = POL.reclass_interval(pa, prm.sampling_interval)
     max_windows = POL.reclass_max_windows(pa)
-    hits = clf_b.hits + is_hit.astype(I32) * weight
+    min_samples = CLF.min_probe_samples(
+        interval, POL.probe_interval(pa, prm.probe_interval))
+    hits = clf_b.hits + is_hit.astype(I32) * probed
     accesses = clf_b.accesses + weight
+    sampled = clf_b.sampled + probed
     due = accesses >= interval
-    ratio_now = hits.astype(jnp.float32) / jnp.maximum(accesses, 1)
-    new_type = WT.classify(ratio_now, accesses,
+    ratio_now = hits.astype(jnp.float32) / jnp.maximum(sampled, 1)
+    new_type = WT.classify(ratio_now, sampled,
                            mostly_hit_threshold=prm.mostly_hit_threshold,
-                           mostly_miss_threshold=prm.mostly_miss_threshold)
+                           mostly_miss_threshold=prm.mostly_miss_threshold,
+                           min_samples=min_samples)
     relabel = due & (clf_b.windows < max_windows)
     return CLF.ClassifierState(
         hits=jnp.where(due, 0, hits),
         accesses=jnp.where(due, 0, accesses),
         warp_type=jnp.where(relabel, new_type, clf_b.warp_type),
         ratio=jnp.where(due, ratio_now, clf_b.ratio),
-        windows=clf_b.windows + due.astype(I32))
+        windows=clf_b.windows + due.astype(I32),
+        sampled=jnp.where(due, 0, sampled))
 
 
 def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, owt,
@@ -236,16 +248,20 @@ def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, owt,
 
     # ---- ① classifier + PC table (read by later lanes — never hoisted) -----
     if clf_b is None:
-        clf = _observe_gathered(st.clf, w, hit, valid.astype(I32), prm, pa)
+        clf = _observe_gathered(st.clf, w, hit, valid.astype(I32),
+                                use_l2.astype(I32), prm, pa)
     else:
         clf = st.clf                                 # written back per wave
-        clf_b = _observe_vec(clf_b, hit, valid.astype(I32), prm, pa)
+        clf_b = _observe_vec(clf_b, hit, valid.astype(I32),
+                             use_l2.astype(I32), prm, pa)
     pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
     pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
+    pc_req = st.pc_req.at[pidx].add(valid.astype(I32))
 
     new_st = st._replace(
         tags=tags, rrip=rrip, meta_type=meta_type, clf=clf, eaf=eaf,
-        eaf_gen=eaf_gen, eaf_ctr=eaf_ctr, pc_hits=pc_hits, pc_acc=pc_acc)
+        eaf_gen=eaf_gen, eaf_ctr=eaf_ctr, pc_hits=pc_hits, pc_acc=pc_acc,
+        pc_req=pc_req)
 
     # ---- lifetime counters + scalar metrics (write-only) --------------------
     if not hoist:

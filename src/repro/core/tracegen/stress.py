@@ -50,15 +50,17 @@ STRESS_NAMES = tuple(STRESS_SPECS)
 # with working-set churn at the boundaries — so a phase-0 warp-type
 # label is WRONG for most of the run and the classifier's
 # reclassification window is what decides bypass/insertion/priority
-# quality. The drift runs TOWARD lower hit ratios on purpose: under
-# bypass policies the classifier can follow a warp down (bypassed
-# requests count as misses) but cannot follow it back up — the 1-in-8
-# probe caps a bypassing warp's observable window hit ratio at 0.125,
-# below the 0.2 mostly-miss threshold (the probe-ratchet, DESIGN.md
-# §11) — so recovery-shaped drift would confound the stale-vs-online
-# comparison the family exists to measure. Sized 48
-# (differential-testable on the event engine) up to 2k warps
-# (wavefront-only scale).
+# quality. Historical note: PR 5 restricted the family to this
+# *degrading* direction because the classifier of that era could follow
+# a warp down but not back up — bypassed requests counted as misses, so
+# the 1-in-8 probe capped a bypassing warp's observable window hit
+# ratio at 0.125 < the 0.2 mostly-miss threshold (the probe-ratchet).
+# PR 7 fixed the ratchet (``classifier.observe`` measures the window
+# ratio over the cache-path ``probed`` sample only, so a reformed
+# warp's probe stream can cross the 0.8 mostly-hit threshold), which is
+# what makes the PHASED_RECOVER_* mirror family below measurable at
+# all. Sized 48 (differential-testable on the event engine) up to 2k
+# warps (wavefront-only scale).
 # ---------------------------------------------------------------------------
 
 _HIT_HEAVY = (0.30, 0.45, 0.15, 0.07, 0.03)
@@ -89,3 +91,32 @@ PHASED_SPECS: Dict[str, TraceSpec] = {s.name: s for s in [
 ]}
 
 PHASED_NAMES = tuple(PHASED_SPECS)
+
+#: the mirror drift — miss-heavy warm-up at raised memory pressure,
+#: slide back through mixed, then a hit-heavy tail. Phase-0 labels are
+#: miss-shaped, so under a bypass policy the classifier must ratchet
+#: labels back UP off the probe stream to stop bypassing reformed warps
+#: — exactly the direction the pre-PR 7 probe-ratchet made impossible
+#: (and PR 5 therefore had to avoid). Same 3-regime geometry as
+#: ``_DRIFT_SCHEDULE`` so the two directions are comparable
+#: like-for-like.
+_RECOVER_SCHEDULE = (
+    Phase(frac=1.0, mix=_MISS_HEAVY, churn=0.5, intensity=0.98),
+    Phase(frac=1.0, mix=_MIXED, churn=0.5),
+    Phase(frac=1.0, mix=_HIT_HEAVY),
+)
+
+
+def _phased_recover(name: str, n_warps: int, intensity: float) -> TraceSpec:
+    return TraceSpec(name, mix=_MIXED, intensity=intensity,
+                     n_warps=n_warps, phases=_RECOVER_SCHEDULE)
+
+
+PHASED_RECOVER_SPECS: Dict[str, TraceSpec] = {s.name: s for s in [
+    _phased_recover("PHASED_RECOVER48", 48, 0.95),
+    _phased_recover("PHASED_RECOVER256", 256, 0.95),
+    _phased_recover("PHASED_RECOVER1K", 1024, 0.92),
+    _phased_recover("PHASED_RECOVER2K", 2048, 0.90),
+]}
+
+PHASED_RECOVER_NAMES = tuple(PHASED_RECOVER_SPECS)

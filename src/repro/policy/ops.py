@@ -19,6 +19,21 @@ from repro.policy.spec import PolicyArrays
 F32 = jnp.float32
 I32 = jnp.int32
 
+#: default classifier probe cadence (accesses): every Nth access of a
+#: bypassing warp still takes the cache path, keeping an undiluted
+#: cache-path sample stream alive for reclassification. Deferred to when
+#: ``PolicyArrays.probe_interval`` is 0 (via ``SimParams.probe_interval``).
+DEFAULT_PROBE_INTERVAL = 8
+
+#: PC-table probe cadence (requests): every Nth *request* hitting a PC
+#: entry takes the cache path even if the entry's ratio says bypass, so
+#: the entry's hit/access counters — which only advance on the cache
+#: path — keep sampling and a reformed PC can recover. The cadence
+#: counter is ``SimState.pc_req`` (all valid requests), NOT ``pc_acc``:
+#: gating the probe on a counter that freezes while bypassing would fire
+#: at most once more after bypassing starts, then never again.
+PC_PROBE_INTERVAL = 16
+
 
 def hash_index(x, salt, mod):
     """Knuth-style multiplicative hash -> [0, mod). Shared by the
@@ -30,20 +45,23 @@ def hash_index(x, salt, mod):
 
 
 def bypass_decision(pa: PolicyArrays, *, wtype, probe, token_bit,
-                    pc_hits, pc_acc, rand_u):
+                    pc_hits, pc_acc, pc_req, rand_u):
     """② Should this request skip the shared cache?
 
     wtype:     i32[] current warp/sequence type (mechanism "medic")
     probe:     bool[] periodic re-learning probe (forces the cache path)
     token_bit: bool[] PCAL token ownership (mechanism "pcal")
-    pc_hits/pc_acc: i32[] PC-table counters (mechanism "pcbyp")
+    pc_hits/pc_acc: i32[] PC-table cache-path counters (mechanism "pcbyp")
+    pc_req:    i32[] PC-table all-request cadence counter (probe clock)
     rand_u:    f32[] uniform variate in [0,1) (mechanism "rand")
     """
     c_none = jnp.zeros(jnp.shape(wtype), bool)
     c_medic = WT.is_bypass_type(wtype) & ~probe
     c_pcal = ~token_bit
     pc_ratio = pc_hits / jnp.maximum(pc_acc, 1)
-    pc_probe = (pc_acc % 16) == 0
+    # probe on the Nth request of each cadence window (not the zeroth —
+    # `% N == 0` would fire on a fresh entry's very first request)
+    pc_probe = (pc_req % PC_PROBE_INTERVAL) == PC_PROBE_INTERVAL - 1
     c_pcbyp = (pc_acc > 32) & (pc_ratio < 0.25) & ~pc_probe
     c_rand = rand_u < pa.rand_p
     cand = jnp.stack([c_none, c_medic, c_pcal, c_pcbyp, c_rand]).astype(F32)
@@ -83,6 +101,15 @@ def reclass_interval(pa: PolicyArrays, default):
     policy-visible reclassification knob; 0 defers to the SimParams
     default."""
     return jnp.where(pa.reclass_interval > 0.5, pa.reclass_interval,
+                     jnp.asarray(default, F32))
+
+
+def probe_interval(pa: PolicyArrays, default):
+    """①② Effective probe cadence (accesses between forced cache-path
+    probes of a bypassing warp) — policy-visible and sweepable like the
+    sampling window; 0 defers to the SimParams default
+    (``DEFAULT_PROBE_INTERVAL``)."""
+    return jnp.where(pa.probe_interval > 0.5, pa.probe_interval,
                      jnp.asarray(default, F32))
 
 

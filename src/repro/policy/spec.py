@@ -41,6 +41,12 @@ class Policy:
     # sampling window in accesses; 0 = the SimParams default. A
     # policy-visible knob so one vmapped sweep can compare windows.
     reclass_interval: int = 0
+    # probe cadence in accesses: every ``probe_interval``-th access of a
+    # bypassing warp still takes the cache path so the classifier keeps
+    # an undiluted cache-path sample (the probe stream) to re-learn
+    # from. 0 = the SimParams default (8). Traced and sweepable
+    # alongside ``reclass_interval``.
+    probe_interval: int = 0
 
     def __post_init__(self):
         if self.bypass not in BYPASS_MECHS:
@@ -56,6 +62,11 @@ class Policy:
             raise ValueError(
                 f"reclass_interval must be a non-negative int, got "
                 f"{self.reclass_interval!r}")
+        if self.probe_interval < 0 or \
+                self.probe_interval != int(self.probe_interval):
+            raise ValueError(
+                f"probe_interval must be a non-negative int, got "
+                f"{self.probe_interval!r}")
 
 
 class PolicyArrays(NamedTuple):
@@ -68,6 +79,7 @@ class PolicyArrays(NamedTuple):
     pcal_frac: jnp.ndarray     # f32[]
     label_sel: jnp.ndarray     # f32[3] one-hot over LABEL_MECHS
     reclass_interval: jnp.ndarray  # f32[] 0 = SimParams default
+    probe_interval: jnp.ndarray    # f32[] 0 = SimParams default
 
 
 def _one_hot(index: int, n: int) -> jnp.ndarray:
@@ -87,6 +99,7 @@ def to_arrays(pol: Policy) -> PolicyArrays:
         label_sel=_one_hot(LABEL_MECHS.index(pol.labeling),
                            len(LABEL_MECHS)),
         reclass_interval=jnp.asarray(pol.reclass_interval, F32),
+        probe_interval=jnp.asarray(pol.probe_interval, F32),
     )
 
 

@@ -41,6 +41,7 @@ class DecisionTables:
             token_bit=jnp.ones((WT.NUM_TYPES,), bool),
             pc_hits=jnp.zeros((WT.NUM_TYPES,), I32),
             pc_acc=jnp.zeros((WT.NUM_TYPES,), I32),
+            pc_req=jnp.zeros((WT.NUM_TYPES,), I32),
             rand_u=jnp.ones((WT.NUM_TYPES,), F32))
         rank = ops.insertion_rank(
             pa, wtype=types, eaf_bit=jnp.zeros((WT.NUM_TYPES,), bool),

@@ -119,6 +119,11 @@ def test_invariants_phased_family(name):
     check_invariants(TG.PHASED_SPECS[name], seed=1)
 
 
+@pytest.mark.parametrize("name", TG.PHASED_RECOVER_SPECS)
+def test_invariants_phased_recover_family(name):
+    check_invariants(TG.PHASED_RECOVER_SPECS[name], seed=1)
+
+
 def test_mix_fraction_converges_at_scale():
     """I1 sharpens with warp count: at 4096 warps every archetype
     fraction lands within 3 points of the spec mixture."""

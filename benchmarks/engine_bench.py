@@ -196,6 +196,12 @@ def fused_ab(quick: bool = False) -> Tuple[List[dict], Dict]:
     warp point where the [Q, N] mask materialization and the O(W log W)
     argsort dominate; --quick stops at the cheap 48-warp pair and gates
     on ``fused_speedup_min`` only.
+
+    The second half is the same A/B for the CACHE pass (ISSUE 8):
+    ``cache_backend="ref"`` vs ``"fused"`` with the timing pass pinned
+    to the default on both sides, best-of-3 warm walls, emitting
+    ``cache_fused_speedup_bfs48`` (the CI floor) and, on the full run,
+    ``cache_fused_speedup_wide1k``.
     """
     rows: List[dict] = []
     derived: Dict[str, object] = {}
@@ -221,4 +227,30 @@ def fused_ab(quick: bool = False) -> Tuple[List[dict], Dict]:
         speedups.append(sp)
         derived[f"fused_speedup_{name.lower()}"] = round(sp, 2)
     derived["fused_speedup_min"] = round(min(speedups), 2)
+
+    # ---- cache-pass A/B (ISSUE 8): cache_backend ref vs fused --------------
+    # same in-run convention, best-of-3 warm repetitions per side (the
+    # cache pass is a smaller slice of the engine step than the timing
+    # pass was, so single-shot warm walls are noisier than the ratio).
+    # The timing pass rides the default backend on BOTH sides — this
+    # isolates the cache-pass fusion.
+    for name, scen, policies in points:
+        tr = scen.materialize()
+        args = _sweep_args(tr, idx=0)
+        (_, n_warps, lanes) = scen.shape
+        kw = dict(n_warps=n_warps, lanes=lanes, prm=PRM,
+                  engine="wavefront")
+        pols = (BL.MEDIC,)
+        walls = {}
+        for backend in ("ref", "fused"):
+            best = min(_timed_sweep(args, pols, cache_backend=backend,
+                                    **kw)
+                       for _ in range(3))
+            walls[backend] = best
+            rows.append({"scale": f"cache_ab:{name}",
+                         "engine": "wavefront", "cache_backend": backend,
+                         "policies": len(pols),
+                         "wall_s": round(best, 3)})
+        derived[f"cache_fused_speedup_{name.lower()}"] = round(
+            walls["ref"] / walls["fused"], 2)
     return rows, derived

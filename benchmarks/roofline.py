@@ -6,7 +6,9 @@ op-level timings of the wavefront engine's per-wave work (ISSUE 6).
     PYTHONPATH=src python -m benchmarks.roofline --wavefront [--quick]
 
 The wavefront mode times the three per-wave components in isolation —
-wave selection (argsort vs top_k), the cache-pass lane scan, and the
+wave selection (argsort vs top_k), the cache pass (ref lane scan vs the
+fused one-sweep backend, plus a sub-attribution of the ref scan into
+tag gather / RRIP+fill / EAF+PC updates / observe scatter), and the
 timing pass (unfused ref vs fused scan recovery) — at W ∈ {48, 256,
 1024, 4096}, which is how the fusion targets were ranked. JSON output
 rides ``benchmarks/run.py --json --only roofline_wavefront``.
@@ -138,6 +140,8 @@ def wavefront_ops(quick: bool = False) -> Tuple[List[dict], Dict]:
     from repro.core.engine import request as REQ
     from repro.core.engine import wavefront as WF
     from repro.core.engine.state import SimParams, init_state
+    from repro.kernels.cache_pass import ops as CPASS
+    from repro.kernels.cache_pass import ref as CREF
     from repro.kernels.wavefront_scan import ops as WSCAN
     from repro.kernels.wavefront_scan.ref import QueueCarry
     from repro.policy import ops as POL
@@ -161,38 +165,97 @@ def wavefront_ops(quick: bool = False) -> Tuple[List[dict], Dict]:
         t_sort = _timed_us(sel_sort, ready)
         t_topk = _timed_us(sel_topk, ready)
 
-        # ---- cache pass: the L-lane scan over one wave --------------------
+        # ---- cache pass: ref lane scan vs fused one-sweep -----------------
         st0 = init_state(n_warps, prm)
         w_sel = jnp.asarray(
             rng.choice(n_warps, size=B, replace=False), jnp.int32)
         pc_b = jnp.asarray(rng.integers(0, 64, B), jnp.int32)
         owt_b = jnp.zeros((B,), jnp.int32)
+        slot_ok = jnp.ones((B,), bool)
         t0w = jnp.sort(ready)[:B]
+        lines_lb = jnp.swapaxes(lines, 0, 1)
+
+        def cache_fn(backend):
+            def run(st, t0v, addr_lb):
+                clf_b0 = jax.tree.map(lambda a: a[w_sel], st.clf)
+                st, clf_b, recs = CPASS.wave_cache_pass(
+                    st, clf_b0, tokens[w_sel], t0v, addr_lb, pc_b,
+                    owt_b, slot_ok, prm, pa, backend=backend)
+                st = st._replace(clf=jax.tree.map(
+                    lambda full, b: full.at[w_sel].set(b), st.clf, clf_b))
+                return st, recs
+            return jax.jit(run)
+        cargs = (st0, t0w, lines_lb)
+        t_cache_ref = _timed_us(cache_fn("ref"), *cargs)
+        t_cache_fused = _timed_us(cache_fn("fused"), *cargs)
+
+        # ---- cache-pass sub-attribution: the ref scan's four stages -------
+        # Each stage timed as its own L-lane scan carrying only that
+        # mechanism's state — attribution of where the ref number goes,
+        # not additive wall-clock.
+        lane_ids = jnp.arange(lanes, dtype=jnp.int32)
+        sidx_lb = REQ.set_index(lines_lb, prm)
+        valid_lb = lines_lb >= 0
 
         @jax.jit
-        def cache_fn(st, t0v, lines_b):
-            clf_b0 = jax.tree.map(lambda a: a[w_sel], st.clf)
-            tokens_b = tokens[w_sel]
+        def sub_tag_gather(tags, addr_lb):
+            def step(t, xs):
+                sidx, addr = xs
+                tset = t[sidx]
+                is_line = tset == addr[:, None]
+                hit_way = jnp.argmax(is_line, axis=1)
+                row = jnp.where(
+                    jnp.arange(prm.ways)[None, :] == hit_way[:, None],
+                    addr[:, None], tset)
+                t = t.at[sidx].set(row, mode="drop")
+                return t, jnp.any(is_line, axis=1)
+            return jax.lax.scan(step, tags, (sidx_lb, addr_lb))
 
-            def lane_step(c, xs):
-                s, cb = c
-                lane, addr = xs
-                v = addr >= 0
-                t_arr = t0v + lane.astype(jnp.float32) * prm.lane_skew
-                s, cb, rec = WF._cache_pass(s, t_arr, w_sel, addr, pc_b,
-                                            v, owt_b, prm, pa, tokens,
-                                            True, clf_b=cb,
-                                            tokens_b=tokens_b)
-                return (s, cb), rec
+        @jax.jit
+        def sub_rrip_fill(rrip, meta):
+            def step(c, sidx):
+                r, m = c
+                rset = r[sidx]
+                shift = prm.rrip_max - jnp.max(rset, axis=1)
+                rset = rset + shift[:, None]
+                victim = jnp.argmax(rset, axis=1)
+                voh = jnp.arange(prm.ways)[None, :] == victim[:, None]
+                r = r.at[sidx].set(jnp.where(voh, 0, rset), mode="drop")
+                m = m.at[sidx].set(jnp.where(voh, 1, m[sidx]), mode="drop")
+                return (r, m), victim
+            return jax.lax.scan(step, (rrip, meta), sidx_lb)
 
-            (st, clf_b), recs = jax.lax.scan(
-                lane_step, (st, clf_b0),
-                (jnp.arange(lanes, dtype=jnp.int32),
-                 jnp.swapaxes(lines_b, 0, 1)))
-            st = st._replace(clf=jax.tree.map(
-                lambda full, b: full.at[w_sel].set(b), st.clf, clf_b))
-            return st, recs
-        t_cache = _timed_us(cache_fn, st0, t0w, lines)
+        @jax.jit
+        def sub_eaf_pc(eaf, pch, pca, pcr):
+            def step(c, xs):
+                e, h, a, q = c
+                addr, v = xs
+                eidx = REQ.eaf_index(addr, prm)
+                e = e.at[jnp.where(v, eidx, prm.eaf_bits)].set(
+                    1, mode="drop")
+                pidx2 = REQ.pc_index(pc_b, prm)
+                h = h.at[pidx2].add(v.astype(jnp.int32))
+                a = a.at[pidx2].add(v.astype(jnp.int32))
+                q = q.at[pidx2].add(v.astype(jnp.int32))
+                return (e, h, a, q), None
+            return jax.lax.scan(step, (eaf, pch, pca, pcr),
+                                (lines_lb, valid_lb))
+
+        @jax.jit
+        def sub_observe(clf, addr_lb):
+            clf_b = jax.tree.map(lambda a: a[w_sel], clf)
+
+            def step(cb, addr):
+                v = (addr >= 0).astype(jnp.int32)
+                return CREF.observe_vec(cb, addr >= 0, v, v, prm, pa), None
+            clf_b, _ = jax.lax.scan(step, clf_b, addr_lb)
+            return jax.tree.map(lambda full, b: full.at[w_sel].set(b),
+                                clf, clf_b)
+        t_sub_tag = _timed_us(sub_tag_gather, st0.tags, lines_lb)
+        t_sub_rrip = _timed_us(sub_rrip_fill, st0.rrip, st0.meta_type)
+        t_sub_eaf = _timed_us(sub_eaf_pc, st0.eaf, st0.pc_hits,
+                              st0.pc_acc, st0.pc_req)
+        t_sub_obs = _timed_us(sub_observe, st0.clf, lines_lb)
 
         # ---- timing pass: unfused ref vs fused scan recovery --------------
         addr_s = jnp.repeat(lines, 1, axis=0).reshape(-1)
@@ -224,13 +287,21 @@ def wavefront_ops(quick: bool = False) -> Tuple[List[dict], Dict]:
         t_fused = _timed_us(timing_fn("fused"), *targs)
 
         for op, us in (("select_argsort", t_sort), ("select_topk", t_topk),
-                       ("cache_pass", t_cache), ("timing_ref", t_ref),
+                       ("cache_ref", t_cache_ref),
+                       ("cache_fused", t_cache_fused),
+                       ("cache_sub_tag_gather", t_sub_tag),
+                       ("cache_sub_rrip_fill", t_sub_rrip),
+                       ("cache_sub_eaf_pc", t_sub_eaf),
+                       ("cache_sub_observe", t_sub_obs),
+                       ("timing_ref", t_ref),
                        ("timing_fused", t_fused)):
             rows.append({"W": n_warps, "B": int(B), "op": op,
                          "wall_us": round(us, 1)})
         derived[f"timing_speedup_{n_warps}"] = round(t_ref / t_fused, 2)
         derived[f"select_speedup_{n_warps}"] = round(t_sort / t_topk, 2)
-        biggest = max((("cache_pass", t_cache), ("timing_ref", t_ref),
+        derived[f"cache_speedup_{n_warps}"] = round(
+            t_cache_ref / t_cache_fused, 2)
+        biggest = max((("cache_ref", t_cache_ref), ("timing_ref", t_ref),
                        ("select_argsort", t_sort)), key=lambda kv: kv[1])
         derived[f"unfused_dominant_{n_warps}"] = biggest[0]
     return rows, derived

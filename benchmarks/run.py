@@ -22,10 +22,12 @@ import time
 def _emit(name, rows, derived):
     print(f"\n## {name}")
     if rows:
-        keys = list(rows[0].keys())
+        # union of keys, first-seen order — sections may mix row shapes
+        # (e.g. engine_fused's scan_backend vs cache_backend A/B rows)
+        keys = list(dict.fromkeys(k for r in rows for k in r))
         print(",".join(keys))
         for r in rows:
-            print(",".join(str(r[k]) for k in keys))
+            print(",".join(str(r.get(k, "-")) for k in keys))
     for k, v in derived.items():
         print(f"derived,{name}.{k},{v}")
 

@@ -13,7 +13,8 @@ whole experiment runs in exactly one call per (shape, engine) bucket —
 the invariant the seed-era callers each re-implemented by hand.
 Executables are further shared ACROSS buckets (and across experiments)
 whenever the jit compile key — (shape, flat batch size, policy count,
-engine, wave_size, scan_backend, SimParams) — agrees, because ``simulate_sweep``'s
+engine, wave_size, scan_backend, cache_backend, SimParams) — agrees,
+because ``simulate_sweep``'s
 underlying jit cache is keyed on exactly those; the plan reports that
 via ``n_executables``.
 
@@ -45,6 +46,7 @@ class PlanCall:
     engine: str
     wave_size: Optional[int]
     scan_backend: str
+    cache_backend: str
     scenarios: Tuple[Scenario, ...]    # seed blocks stack in this order
 
     @property
@@ -56,7 +58,7 @@ class PlanCall:
         """Everything ``simulate_sweep``'s jit cache keys on: two calls
         with equal keys share one compiled executable."""
         return (self.shape, self.flat, n_policies, self.engine,
-                self.wave_size, self.scan_backend, prm)
+                self.wave_size, self.scan_backend, self.cache_backend, prm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +118,7 @@ class Plan:
                 n_warps=n_warps, lanes=lanes, prm=exp.prm,
                 engine=call.engine, wave_size=call.wave_size,
                 scan_backend=call.scan_backend,
+                cache_backend=call.cache_backend,
                 oracle_types=np.asarray(tr["oracle_wtype"]))
             out = {k: np.asarray(v) for k, v in out.items()}  # [P, F, ...]
             wall = time.perf_counter() - t0
@@ -149,6 +152,9 @@ class Experiment:
     #: wavefront timing-pass backend (repro.kernels.wavefront_scan);
     #: "auto" = fused lax scans on CPU, Pallas kernel on TPU
     scan_backend: str = "auto"
+    #: wavefront cache-pass backend (repro.kernels.cache_pass);
+    #: "auto" = fused one-sweep on CPU, Pallas kernel on TPU
+    cache_backend: str = "auto"
     prm: SimParams = SimParams()
 
     def __post_init__(self):
@@ -171,7 +177,7 @@ class Experiment:
             raise ValueError(f"experiment {self.name!r}: duplicate policy "
                              f"names {sorted(pdupes)}")
         validate_engine_args(self.engine, self.wave_size,
-                             self.scan_backend)
+                             self.scan_backend, self.cache_backend)
 
     def compile(self) -> Plan:
         """Bucket scenarios by trace shape; one PlanCall per bucket."""
@@ -180,7 +186,7 @@ class Experiment:
             buckets.setdefault(s.shape, []).append(s)
         calls = tuple(
             PlanCall(shape, self.engine, self.wave_size, self.scan_backend,
-                     tuple(scens))
+                     self.cache_backend, tuple(scens))
             for shape, scens in buckets.items())
         return Plan(self, calls)
 
@@ -194,9 +200,10 @@ class Experiment:
 
 def run(scenarios: Sequence[Scenario], policies: Sequence[Policy],
         engine: str = "event", wave_size: Optional[int] = None,
-        scan_backend: str = "auto", prm: SimParams = SimParams(),
+        scan_backend: str = "auto", cache_backend: str = "auto",
+        prm: SimParams = SimParams(),
         name: str = "adhoc", keep_traces: bool = False) -> ResultSet:
     """One-shot helper: ``api.run(scenarios, policies)`` -> ResultSet."""
     return Experiment(name, tuple(scenarios), tuple(policies), engine,
-                      wave_size, scan_backend, prm).run(
+                      wave_size, scan_backend, cache_backend, prm).run(
                           keep_traces=keep_traces)

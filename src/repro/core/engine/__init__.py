@@ -27,6 +27,7 @@ from repro.core.engine import event as _event
 from repro.core.engine import wavefront as _wavefront
 from repro.core.engine.state import (N_QBINS, SimParams, SimState,
                                      init_state)
+from repro.kernels.cache_pass.ops import BACKENDS as CACHE_BACKENDS
 from repro.kernels.wavefront_scan.ops import BACKENDS as SCAN_BACKENDS
 from repro.policy import Policy, stack_policies, to_arrays
 
@@ -34,14 +35,18 @@ ENGINES = ("event", "wavefront")
 
 
 def validate_engine_args(engine: str, wave_size: Optional[int] = None,
-                         scan_backend: str = "auto") -> None:
+                         scan_backend: str = "auto",
+                         cache_backend: str = "auto") -> None:
     """Front-door validation shared by ``simulate``/``simulate_sweep`` and
     the declarative ``repro.api`` layer.
 
     Raises ``ValueError`` for an unknown engine, and — instead of silently
-    ignoring it — for a ``wave_size`` or non-default ``scan_backend``
-    passed to any engine that does not consume one (only ``"wavefront"``
-    does).
+    ignoring it — for a ``wave_size``, non-default ``scan_backend`` or
+    non-default ``cache_backend`` passed to any engine that does not
+    consume one (only ``"wavefront"`` does). Catching a bad backend
+    string here, before any tracing starts, is what keeps the failure a
+    one-line ``ValueError`` with the allowed set instead of a shape
+    error deep inside jit.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
@@ -65,14 +70,24 @@ def validate_engine_args(engine: str, wave_size: Optional[int] = None,
             f"scan_backend={scan_backend!r} is only meaningful with "
             f"engine='wavefront'; engine={engine!r} would silently "
             f"ignore it")
+    if cache_backend not in CACHE_BACKENDS:
+        raise ValueError(
+            f"unknown cache_backend {cache_backend!r}; choose from "
+            f"{CACHE_BACKENDS}")
+    if cache_backend != "auto" and engine != "wavefront":
+        raise ValueError(
+            f"cache_backend={cache_backend!r} is only meaningful with "
+            f"engine='wavefront'; engine={engine!r} would silently "
+            f"ignore it")
 
 
-def _core(engine: str, wave_size: Optional[int], scan_backend: str):
-    validate_engine_args(engine, wave_size, scan_backend)
+def _core(engine: str, wave_size: Optional[int], scan_backend: str,
+          cache_backend: str):
+    validate_engine_args(engine, wave_size, scan_backend, cache_backend)
     if engine == "event":
         return _event.simulate_core
     return partial(_wavefront.simulate_core, wave_size=wave_size,
-                   scan_backend=scan_backend)
+                   scan_backend=scan_backend, cache_backend=cache_backend)
 
 
 def _oracle_or_zeros(oracle_types, trace_lines, policies):
@@ -94,27 +109,29 @@ def _oracle_or_zeros(oracle_types, trace_lines, policies):
 
 @partial(jax.jit,
          static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size",
-                          "scan_backend"))
+                          "scan_backend", "cache_backend"))
 def _simulate_one(trace_lines, trace_pcs, compute_gap, oracle_types, pa, *,
                   n_warps: int, lanes: int, prm: SimParams,
                   engine: str = "event",
                   wave_size: Optional[int] = None,
-                  scan_backend: str = "auto") -> Dict[str, Any]:
-    core = _core(engine, wave_size, scan_backend)
+                  scan_backend: str = "auto",
+                  cache_backend: str = "auto") -> Dict[str, Any]:
+    core = _core(engine, wave_size, scan_backend, cache_backend)
     return core(trace_lines, trace_pcs, compute_gap, oracle_types, pa,
                 n_warps=n_warps, lanes=lanes, prm=prm)
 
 
 @partial(jax.jit,
          static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size",
-                          "scan_backend"))
+                          "scan_backend", "cache_backend"))
 def _simulate_batch(trace_lines, trace_pcs, compute_gap, oracle_types,
                     pa_batch, *, n_warps: int, lanes: int, prm: SimParams,
                     engine: str = "event",
                     wave_size: Optional[int] = None,
-                    scan_backend: str = "auto"):
-    one = partial(_core(engine, wave_size, scan_backend), n_warps=n_warps,
-                  lanes=lanes, prm=prm)
+                    scan_backend: str = "auto",
+                    cache_backend: str = "auto"):
+    one = partial(_core(engine, wave_size, scan_backend, cache_backend),
+                  n_warps=n_warps, lanes=lanes, prm=prm)
     if trace_lines.ndim == 4:      # seed-stacked traces [S, I, W, L]
         over_seeds = jax.vmap(one, in_axes=(0, 0, 0, 0, None))
         return jax.vmap(over_seeds, in_axes=(None, None, None, None, 0))(
@@ -126,7 +143,8 @@ def _simulate_batch(trace_lines, trace_pcs, compute_gap, oracle_types,
 def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
              lanes: int, prm: SimParams, pol: Policy,
              engine: str = "event", wave_size: Optional[int] = None,
-             scan_backend: str = "auto", oracle_types=None) -> Dict[str, Any]:
+             scan_backend: str = "auto", cache_backend: str = "auto",
+             oracle_types=None) -> Dict[str, Any]:
     """Run one workload under one policy.
 
     ``engine="event"`` (default) is the exact discrete-event reference:
@@ -142,10 +160,11 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
     reuses the same compiled executable for a given workload shape.
 
     ``scan_backend`` selects the wavefront timing-pass implementation
-    (``repro.kernels.wavefront_scan``): ``"auto"`` (default) picks the
-    fused associative-scan path on CPU and the Pallas kernel on TPU,
+    (``repro.kernels.wavefront_scan``) and ``cache_backend`` the
+    cache-pass one (``repro.kernels.cache_pass``): ``"auto"`` (default)
+    picks the fused one-sweep path on CPU and the Pallas kernel on TPU,
     both output-identical to ``"ref"``, the unfused pre-fusion form kept
-    for in-run perf A/Bs.
+    for in-run perf A/Bs. The two knobs compose freely.
 
     trace_lines: i32[I, W, L]; trace_pcs: i32[I, W]; compute_gap: f32
     scalar or f32[I] (phased per-instruction intensity); oracle_types:
@@ -153,13 +172,14 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
     ``oracle_wtype``) when the policy's labeling mode is "oracle".
     Returns metrics dict (all jnp arrays).
     """
-    validate_engine_args(engine, wave_size, scan_backend)
+    validate_engine_args(engine, wave_size, scan_backend, cache_backend)
     return _simulate_one(trace_lines, trace_pcs, compute_gap,
                          _oracle_or_zeros(oracle_types, trace_lines,
                                           (pol,)),
                          to_arrays(pol), n_warps=n_warps, lanes=lanes,
                          prm=prm, engine=engine, wave_size=wave_size,
-                         scan_backend=scan_backend)
+                         scan_backend=scan_backend,
+                         cache_backend=cache_backend)
 
 
 def simulate_sweep(trace_lines, trace_pcs, compute_gap,
@@ -167,6 +187,7 @@ def simulate_sweep(trace_lines, trace_pcs, compute_gap,
                    prm: SimParams, engine: str = "event",
                    wave_size: Optional[int] = None,
                    scan_backend: str = "auto",
+                   cache_backend: str = "auto",
                    oracle_types=None) -> Dict[str, Any]:
     """Run a whole policy sweep in ONE jitted, vmapped call.
 
@@ -183,17 +204,19 @@ def simulate_sweep(trace_lines, trace_pcs, compute_gap,
     Metrics match per-policy `simulate` calls bit-for-bit on either
     engine (the parity is enforced by tests/test_policy_engine.py).
     """
-    validate_engine_args(engine, wave_size, scan_backend)
+    validate_engine_args(engine, wave_size, scan_backend, cache_backend)
     pa = stack_policies(policies)
     return _simulate_batch(trace_lines, trace_pcs, compute_gap,
                            _oracle_or_zeros(oracle_types, trace_lines,
                                             policies),
                            pa, n_warps=n_warps, lanes=lanes, prm=prm,
                            engine=engine, wave_size=wave_size,
-                           scan_backend=scan_backend)
+                           scan_backend=scan_backend,
+                           cache_backend=cache_backend)
 
 
 __all__ = [
-    "ENGINES", "N_QBINS", "SCAN_BACKENDS", "SimParams", "SimState",
-    "init_state", "simulate", "simulate_sweep", "validate_engine_args",
+    "CACHE_BACKENDS", "ENGINES", "N_QBINS", "SCAN_BACKENDS", "SimParams",
+    "SimState", "init_state", "simulate", "simulate_sweep",
+    "validate_engine_args",
 ]

@@ -54,6 +54,38 @@ def eaf_index(addr, prm: SimParams):
 # ② bypass decision from current classifier / PC-table state
 # ---------------------------------------------------------------------------
 
+def bypass_decision_core(warp_type_w, accesses_w, token_w, pc_hits_v,
+                         pc_acc_v, pc_req_v, addr, valid, prm: SimParams,
+                         pa: PolicyArrays, oracle_wt, rand_u=None):
+    """The bypass decision on fully-gathered inputs: per-warp classifier
+    values AND the request's PC-table counter values. The innermost
+    shared form — the cache-pass backends (``repro.kernels.cache_pass``)
+    call it with their own PC-table representation (the fused sweep
+    threads the tables across unrolled lanes; the Pallas kernel reads
+    one-hot selections from VMEM scratch), which keeps all engines and
+    backends on one copy of the mechanism-② math.
+    """
+    wtype = POL.select_label(pa, warp_type_w, oracle_wt)
+    # periodic re-learning probe: the Nth access of each probe window
+    # (cadence ``accesses``, which counts ALL valid requests, so it
+    # keeps ticking while the warp bypasses) is forced down the cache
+    # path. ``% pi == pi - 1`` — not ``== 0``, which would fire on a
+    # warp's zeroth access instead of its Nth. The cadence is the traced
+    # ``PolicyArrays.probe_interval`` (0 defers to SimParams).
+    pi = POL.probe_interval(pa, prm.probe_interval).astype(I32)
+    probe = (accesses_w % pi) == pi - 1
+    # the tie-break draw is pure in ``addr`` — the fused sweep hoists it
+    # out of the lane loop and passes it in precomputed
+    if rand_u is None:
+        rand_u = hash_index(addr, 7, 65536).astype(F32) / 65536.0
+    byp = POL.bypass_decision(pa, wtype=wtype, probe=probe,
+                              token_bit=token_w,
+                              pc_hits=pc_hits_v,
+                              pc_acc=pc_acc_v,
+                              pc_req=pc_req_v, rand_u=rand_u)
+    return byp & valid, wtype
+
+
 def bypass_decision_vals(warp_type_w, accesses_w, token_w, st: SimState,
                          addr, pc, valid, prm: SimParams,
                          pa: PolicyArrays, oracle_wt):
@@ -65,23 +97,11 @@ def bypass_decision_vals(warp_type_w, accesses_w, token_w, st: SimState,
     exactly what a fresh gather would read); the event path and the
     unfused wavefront path gather per call via ``bypass_decision``.
     """
-    wtype = POL.select_label(pa, warp_type_w, oracle_wt)
     pidx = pc_index(pc, prm)
-    # periodic re-learning probe: the Nth access of each probe window
-    # (cadence ``accesses``, which counts ALL valid requests, so it
-    # keeps ticking while the warp bypasses) is forced down the cache
-    # path. ``% pi == pi - 1`` — not ``== 0``, which would fire on a
-    # warp's zeroth access instead of its Nth. The cadence is the traced
-    # ``PolicyArrays.probe_interval`` (0 defers to SimParams).
-    pi = POL.probe_interval(pa, prm.probe_interval).astype(I32)
-    probe = (accesses_w % pi) == pi - 1
-    rand_u = hash_index(addr, 7, 65536).astype(F32) / 65536.0
-    byp = POL.bypass_decision(pa, wtype=wtype, probe=probe,
-                              token_bit=token_w,
-                              pc_hits=st.pc_hits[pidx],
-                              pc_acc=st.pc_acc[pidx],
-                              pc_req=st.pc_req[pidx], rand_u=rand_u)
-    return byp & valid, wtype, pidx
+    byp, wtype = bypass_decision_core(
+        warp_type_w, accesses_w, token_w, st.pc_hits[pidx],
+        st.pc_acc[pidx], st.pc_req[pidx], addr, valid, prm, pa, oracle_wt)
+    return byp, wtype, pidx
 
 
 def bypass_decision(st: SimState, w, addr, pc, valid, prm: SimParams,

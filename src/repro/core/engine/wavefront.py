@@ -8,19 +8,24 @@ selected by readiness, its requests are close together in simulated time,
 which is what makes batched processing faithful. Each wave runs two
 passes:
 
-  1. **Cache pass** (scan over the L lanes): bypass decisions, tag
-     lookup, RRIP fill/eviction, EAF and PC-table bookkeeping, and the
-     classifier update (an O(B) gather/scatter form of
-     ``classifier.observe``). A lane sub-step carries at most ONE
+  1. **Cache pass**: bypass decisions, tag lookup, RRIP fill/eviction,
+     EAF and PC-table bookkeeping, and the classifier update on
+     wave-resident [B] counter rows. A lane sub-step carries at most ONE
      request per warp, so the batched observe is equivalent to the event
      loop's sequential per-request observes (warp ids are distinct —
      pinned by the differential suite). None of these outcomes depend on
      request *timing*, so the pass needs no queue state. Cross-slot
      structural conflicts inside one sub-step (two wave warps filling
      the same cache set) resolve last-write-wins in chronological slot
-     order via masked scatters. On the fused path the lifetime counters
-     and scalar metrics — never read during the wave — are hoisted out
-     of the lane scan and applied once per wave (integer adds, so the
+     order. The implementation lives in ``repro.kernels.cache_pass``
+     behind a backend gate (``cache_backend``, mirroring the timing
+     pass's ``scan_backend``): ``"ref"`` is the original per-lane
+     ``lax.scan``, ``"fused"`` a bitwise-identical one-sweep
+     reformulation that resolves same-set write conflicts with explicit
+     per-set chronology pointers (the CPU default), ``"pallas"`` a
+     lane-chunked TPU kernel. The lifetime counters and scalar metrics
+     — never read during the wave — are hoisted out of the pass and
+     applied once per wave for every backend (integer adds, so the
      totals are exact either way).
 
   2. **Timing pass**: all B×L requests of the wave, in warp-major
@@ -67,13 +72,20 @@ from typing import Any, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import classifier as CLF
-from repro.core import warp_types as WT
 from repro.core.engine import request as REQ
 from repro.core.engine.state import SimParams, SimState, init_state
+from repro.kernels.cache_pass import ops as CPASS
+from repro.kernels.cache_pass.ref import observe_gathered, observe_vec
 from repro.kernels.wavefront_scan import ops as WSCAN
 from repro.kernels.wavefront_scan.ref import QueueCarry
 from repro.policy import PolicyArrays, ops as POL
+
+# the O(B) classifier-observe forms moved to repro.kernels.cache_pass.ref
+# with the rest of the pass (PR 8); re-exported for their established
+# import site (tests/test_engine_differential.py pins them against the
+# full-width ``classifier.observe``)
+_observe_gathered = observe_gathered
+_observe_vec = observe_vec
 
 F32 = jnp.float32
 I32 = jnp.int32
@@ -93,193 +105,6 @@ def default_wave_size(n_warps: int) -> int:
     if n_warps > 256:
         return n_warps // 4
     return max(min(n_warps, 8), n_warps // 6)
-
-
-def _observe_gathered(clf: CLF.ClassifierState, w, is_hit, weight, probed,
-                      prm: SimParams, pa: PolicyArrays
-                      ) -> CLF.ClassifierState:
-    """``classifier.observe`` restricted to the B touched warps.
-
-    Equivalent to the full-width observe — an untouched warp's counters
-    don't change, so its window can never reset on this call — but costs
-    O(B) gather/scatter instead of O(W) elementwise work per sub-step,
-    which is what keeps the cache pass O(B) at stress-scale warp counts.
-    Wave warp ids are distinct, so the scatters don't collide. Parity
-    with `CLF.observe` is pinned by tests/test_engine_differential.py.
-
-    The sampling window, probe cadence and label-freeze cap come from
-    the policy (①, same knobs the event engine passes to
-    ``CLF.observe``); ``probed`` marks the cache-path requests whose
-    undiluted sample the window ratio is measured over.
-    """
-    interval = POL.reclass_interval(pa, prm.sampling_interval)
-    max_windows = POL.reclass_max_windows(pa)
-    min_samples = CLF.min_probe_samples(
-        interval, POL.probe_interval(pa, prm.probe_interval))
-    hits = clf.hits[w] + is_hit.astype(I32) * probed
-    accesses = clf.accesses[w] + weight
-    sampled = clf.sampled[w] + probed
-    due = accesses >= interval
-    ratio_now = hits.astype(jnp.float32) / jnp.maximum(sampled, 1)
-    new_type = WT.classify(ratio_now, sampled,
-                           mostly_hit_threshold=prm.mostly_hit_threshold,
-                           mostly_miss_threshold=prm.mostly_miss_threshold,
-                           min_samples=min_samples)
-    relabel = due & (clf.windows[w] < max_windows)
-    return CLF.ClassifierState(
-        hits=clf.hits.at[w].set(jnp.where(due, 0, hits)),
-        accesses=clf.accesses.at[w].set(jnp.where(due, 0, accesses)),
-        warp_type=clf.warp_type.at[w].set(
-            jnp.where(relabel, new_type, clf.warp_type[w])),
-        ratio=clf.ratio.at[w].set(jnp.where(due, ratio_now, clf.ratio[w])),
-        windows=clf.windows.at[w].add(due.astype(I32)),
-        sampled=clf.sampled.at[w].set(jnp.where(due, 0, sampled)),
-    )
-
-
-def _observe_vec(clf_b: CLF.ClassifierState, is_hit, weight, probed,
-                 prm: SimParams, pa: PolicyArrays) -> CLF.ClassifierState:
-    """``_observe_gathered`` on wave-resident [B] counter slices.
-
-    The fused path gathers the wave's classifier rows ONCE before the
-    lane scan, updates them as plain [B] vectors here (no per-lane
-    gather/scatter against the [W] arrays — XLA:CPU serializes those),
-    and scatters them back once per wave. Sound because wave warp ids
-    are distinct: nothing else reads or writes those rows mid-wave, so
-    the carried slice is exactly what a fresh gather would return, and
-    the write-back stores exactly what the per-lane scatters would
-    have."""
-    interval = POL.reclass_interval(pa, prm.sampling_interval)
-    max_windows = POL.reclass_max_windows(pa)
-    min_samples = CLF.min_probe_samples(
-        interval, POL.probe_interval(pa, prm.probe_interval))
-    hits = clf_b.hits + is_hit.astype(I32) * probed
-    accesses = clf_b.accesses + weight
-    sampled = clf_b.sampled + probed
-    due = accesses >= interval
-    ratio_now = hits.astype(jnp.float32) / jnp.maximum(sampled, 1)
-    new_type = WT.classify(ratio_now, sampled,
-                           mostly_hit_threshold=prm.mostly_hit_threshold,
-                           mostly_miss_threshold=prm.mostly_miss_threshold,
-                           min_samples=min_samples)
-    relabel = due & (clf_b.windows < max_windows)
-    return CLF.ClassifierState(
-        hits=jnp.where(due, 0, hits),
-        accesses=jnp.where(due, 0, accesses),
-        warp_type=jnp.where(relabel, new_type, clf_b.warp_type),
-        ratio=jnp.where(due, ratio_now, clf_b.ratio),
-        windows=clf_b.windows + due.astype(I32),
-        sampled=jnp.where(due, 0, sampled))
-
-
-def _cache_pass(st: SimState, t_arr, w, addr, pc, valid, owt,
-                prm: SimParams, pa: PolicyArrays, tokens,
-                hoist: bool, clf_b: Optional[CLF.ClassifierState] = None,
-                tokens_b=None) -> tuple:
-    """One lane sub-step of a wave: the timing-independent half of
-    ``event._request_step`` for [B] requests (at most one per warp),
-    slots in chronological order. Returns ``(st, clf_b, records)``.
-
-    ``hoist=True`` (the fused path) defers the write-only bookkeeping —
-    lifetime hit/access counters and the scalar metric sums, which
-    nothing reads until finalize — to one per-wave update in the caller;
-    the per-lane outputs it needs ride along in the record tuple either
-    way. All of it is integer accumulation, so the hoisted totals are
-    exactly the per-lane ones.
-
-    ``clf_b`` (fused path) carries the wave's classifier rows as [B]
-    vectors through the lane scan instead of gathering/scattering the
-    [W] arrays every lane — see ``_observe_vec`` for why that is
-    bitwise-equivalent. ``None`` (the ref path) keeps the original
-    per-lane ``_observe_gathered`` graph.
-    """
-    m = st.metrics
-
-    # ---- ①② label select + bypass decision (shared branchless math) --------
-    if clf_b is None:
-        byp, wtype, pidx = REQ.bypass_decision(st, w, addr, pc, valid,
-                                               prm, pa, tokens, owt)
-    else:
-        byp, wtype, pidx = REQ.bypass_decision_vals(
-            clf_b.warp_type, clf_b.accesses, tokens_b, st, addr, pc,
-            valid, prm, pa, owt)
-    use_l2 = valid & ~byp
-
-    # ---- L2 lookup (sub-step-start tags) -----------------------------------
-    sidx = REQ.set_index(addr, prm)
-    tset = st.tags[sidx]                              # [B, ways]
-    is_line = tset == addr[:, None]
-    hit = jnp.any(is_line, axis=1) & use_l2
-    hit_way = jnp.argmax(is_line, axis=1)
-    way_oh = jnp.arange(prm.ways, dtype=I32)[None, :] == hit_way[:, None]
-    rset = st.rrip[sidx]
-    rset = jnp.where(hit[:, None] & way_oh, 0, rset)
-
-    # ---- ③ fill + insertion -------------------------------------------------
-    allocate = use_l2 & ~hit
-    shift = prm.rrip_max - jnp.max(rset, axis=1)
-    rset_aged = rset + jnp.where(allocate, shift, 0)[:, None]
-    victim = jnp.argmax(rset_aged, axis=1)
-    evicted = jnp.take_along_axis(tset, victim[:, None], axis=1)[:, 0]
-    victim_type = st.meta_type[sidx, victim]          # read BEFORE overwrite
-    rank = REQ.insertion_rank(st, wtype, addr, prm, pa)
-
-    # masked scatters: an out-of-bounds set index drops the update, and
-    # duplicate-set conflicts resolve last-write-wins in arrival order
-    s_alloc = jnp.where(allocate, sidx, prm.sets)
-    tags = st.tags.at[s_alloc, victim].set(addr, mode="drop")
-    vict_oh = jnp.arange(prm.ways, dtype=I32)[None, :] == victim[:, None]
-    new_row = jnp.where(allocate[:, None],
-                        jnp.where(vict_oh, rank[:, None], rset_aged), rset)
-    s_l2 = jnp.where(use_l2, sidx, prm.sets)
-    rrip = st.rrip.at[s_l2].set(new_row, mode="drop")
-    meta_type = st.meta_type.at[s_alloc, victim].set(wtype, mode="drop")
-
-    # EAF bookkeeping: remember evicted addresses; the periodic reset is
-    # a generation bump (state.py), not an array clear
-    ev_valid = allocate & (evicted >= 0)
-    eidx = REQ.eaf_index(evicted, prm)
-    eaf = st.eaf.at[jnp.where(ev_valid, eidx, prm.eaf_bits)].set(
-        st.eaf_gen, mode="drop")
-    eaf_ctr = st.eaf_ctr + jnp.sum(ev_valid.astype(I32))
-    reset = eaf_ctr >= prm.eaf_capacity
-    eaf_gen = jnp.where(reset, st.eaf_gen + 1, st.eaf_gen)
-    eaf_ctr = jnp.where(reset, 0, eaf_ctr)
-
-    # ---- ① classifier + PC table (read by later lanes — never hoisted) -----
-    if clf_b is None:
-        clf = _observe_gathered(st.clf, w, hit, valid.astype(I32),
-                                use_l2.astype(I32), prm, pa)
-    else:
-        clf = st.clf                                 # written back per wave
-        clf_b = _observe_vec(clf_b, hit, valid.astype(I32),
-                             use_l2.astype(I32), prm, pa)
-    pc_hits = st.pc_hits.at[pidx].add((hit & use_l2).astype(I32))
-    pc_acc = st.pc_acc.at[pidx].add(use_l2.astype(I32))
-    pc_req = st.pc_req.at[pidx].add(valid.astype(I32))
-
-    new_st = st._replace(
-        tags=tags, rrip=rrip, meta_type=meta_type, clf=clf, eaf=eaf,
-        eaf_gen=eaf_gen, eaf_ctr=eaf_ctr, pc_hits=pc_hits, pc_acc=pc_acc,
-        pc_req=pc_req)
-
-    # ---- lifetime counters + scalar metrics (write-only) --------------------
-    if not hoist:
-        metrics = dict(m)
-        metrics["l2_accesses"] = m["l2_accesses"] + jnp.sum(
-            use_l2.astype(I32))
-        metrics["l2_hits"] = m["l2_hits"] + jnp.sum(hit.astype(I32))
-        metrics["bypasses"] = m["bypasses"] + jnp.sum(byp.astype(I32))
-        metrics["evictions_by_type"] = m["evictions_by_type"].at[
-            victim_type].add(ev_valid.astype(I32))
-        new_st = new_st._replace(
-            tot_hits=st.tot_hits.at[w].add(hit.astype(I32)),
-            tot_acc=st.tot_acc.at[w].add(valid.astype(I32)),
-            metrics=metrics)
-
-    hp = POL.is_high_priority(pa, wtype)
-    return new_st, clf_b, (t_arr, addr, valid, byp, use_l2, hit, hp,
-                           victim_type, ev_valid)
 
 
 class QueueAnchors(NamedTuple):
@@ -383,15 +208,18 @@ def _timing_pass(st: SimState, an: QueueAnchors, recs, prm: SimParams,
 def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
                   pa: PolicyArrays, *, n_warps: int, lanes: int,
                   prm: SimParams, wave_size: Optional[int] = None,
-                  scan_backend: str = "auto") -> Dict[str, Any]:
+                  scan_backend: str = "auto",
+                  cache_backend: str = "auto") -> Dict[str, Any]:
     """One workload × one policy on the wavefront engine. Vmappable.
 
     ``compute_gap`` is a scalar or f32[I]; ``oracle_types`` i32[I, W]
     (same contract as ``event.simulate_core``). ``scan_backend`` selects
-    the wave-step implementation (``wavefront_scan.BACKENDS``):
-    ``"ref"`` is the pre-fusion path kept as the unfused side of the
-    in-run perf A/B; every other backend is output-identical to it
-    (bitwise for ``"fused"``, the CPU default under ``"auto"``)."""
+    the timing-pass implementation (``wavefront_scan.BACKENDS``) and
+    ``cache_backend`` the cache-pass one (``cache_pass.BACKENDS``):
+    ``"ref"`` is the respective pre-fusion path kept as the unfused side
+    of the in-run perf A/B; every other backend is output-identical to
+    it (bitwise for ``"fused"``, the CPU default under ``"auto"``), so
+    the two knobs compose freely."""
     n_instr = trace_lines.shape[0]
     B = max(1, min(wave_size or default_wave_size(n_warps), n_warps))
     # wave-count CAP (the while_loop usually exits earlier, see module
@@ -399,7 +227,11 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
     # per wave; once fewer than B warps remain every wave advances all
     # of them, so at most n_instr further waves finish the tail
     n_waves = -(-n_instr * n_warps // B) + n_instr
-    fused = WSCAN.resolve_backend(scan_backend) != "ref"
+    # the stable-argsort wave selection only survives in the all-ref
+    # baseline graph; any fused backend takes the top_k form (bitwise
+    # tie-parity between the two is pinned by the differential suite)
+    fused = (WSCAN.resolve_backend(scan_backend) != "ref"
+             or CPASS.resolve_backend(cache_backend) != "ref")
     tokens = POL.pcal_tokens(pa, n_warps)
 
     lines_wi = jnp.swapaxes(trace_lines, 0, 1)      # [W, I, L]
@@ -434,67 +266,44 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
         pc_b = pcs_wi[w_sel, i_sel]                  # [B]
         owt_b = oracle_wi[w_sel, i_sel]              # [B]
 
-        xs = (jnp.arange(lanes, dtype=I32), jnp.swapaxes(lines_b, 0, 1))
-        if fused:
-            # wave-resident classifier rows: gather once, carry [B]
-            # slices through the lane scan, scatter back once (wave
-            # warp ids are distinct, so nothing else touches the rows
-            # mid-wave — see _observe_vec)
-            clf_b0 = jax.tree.map(lambda a: a[w_sel], st.clf)
-            tokens_b = tokens[w_sel]
-
-            def lane_step(c, xs):
-                s, cb = c
-                lane, addr = xs                      # i32[], i32[B]
-                valid = (addr >= 0) & slot_ok
-                t_arr = t0 + lane.astype(F32) * prm.lane_skew
-                s, cb, rec = _cache_pass(s, t_arr, w_sel, addr, pc_b,
-                                         valid, owt_b, prm, pa, tokens,
-                                         True, clf_b=cb, tokens_b=tokens_b)
-                return (s, cb), rec
-
-            (st, clf_b), recs = jax.lax.scan(lane_step, (st, clf_b0), xs)
-            st = st._replace(clf=jax.tree.map(
-                lambda full, b: full.at[w_sel].set(b), st.clf, clf_b))
-        else:
-            def lane_step(s, xs):
-                lane, addr = xs                      # i32[], i32[B]
-                valid = (addr >= 0) & slot_ok
-                t_arr = t0 + lane.astype(F32) * prm.lane_skew
-                s, _, rec = _cache_pass(s, t_arr, w_sel, addr, pc_b,
-                                        valid, owt_b, prm, pa, tokens,
-                                        False)
-                return s, rec
-
-            st, recs = jax.lax.scan(lane_step, st, xs)
+        # wave-resident classifier rows: gather once, carry [B] slices
+        # through the pass, scatter back once (wave warp ids are
+        # distinct, so nothing else touches the rows mid-wave — see
+        # cache_pass.ref.observe_vec)
+        clf_b0 = jax.tree.map(lambda a: a[w_sel], st.clf)
+        tokens_b = tokens[w_sel]
+        st, clf_b, recs = CPASS.wave_cache_pass(
+            st, clf_b0, tokens_b, t0, jnp.swapaxes(lines_b, 0, 1), pc_b,
+            owt_b, slot_ok, prm, pa, backend=cache_backend)
+        st = st._replace(clf=jax.tree.map(
+            lambda full, b: full.at[w_sel].set(b), st.clf, clf_b))
         st, an, t_done = _timing_pass(st, an, recs, prm, scan_backend)
 
         (_, _, valid_lb, byp_lb, use_lb, hit_lb, _, vt_lb, ev_lb) = recs
-        if fused:
-            # hoisted write-only bookkeeping: one update per wave
-            # instead of one per lane (integer adds — exact either way)
-            m = st.metrics
-            metrics = dict(m)
-            metrics["l2_accesses"] = m["l2_accesses"] + jnp.sum(
-                use_lb.astype(I32))
-            metrics["l2_hits"] = m["l2_hits"] + jnp.sum(hit_lb.astype(I32))
-            metrics["bypasses"] = m["bypasses"] + jnp.sum(
-                byp_lb.astype(I32))
-            # one-hot over the type bins (victim_type is always a
-            # written label, in range) instead of an [N] scatter-add,
-            # which XLA:CPU serializes per element
-            n_types = m["evictions_by_type"].shape[0]
-            vt_oh = vt_lb.reshape(-1)[:, None] \
-                == jnp.arange(n_types, dtype=I32)[None, :]
-            metrics["evictions_by_type"] = m["evictions_by_type"] + jnp.sum(
-                jnp.where(vt_oh, ev_lb.reshape(-1)[:, None].astype(I32), 0),
-                axis=0)
-            st = st._replace(
-                tot_hits=st.tot_hits.at[w_sel].add(
-                    jnp.sum(hit_lb.astype(I32), axis=0)),
-                tot_acc=st.tot_acc.at[w_sel].add(
-                    jnp.sum(valid_lb.astype(I32), axis=0)),
-                metrics=metrics)
+        # hoisted write-only bookkeeping: one update per wave instead of
+        # one per lane (integer adds — exact either way)
+        m = st.metrics
+        metrics = dict(m)
+        metrics["l2_accesses"] = m["l2_accesses"] + jnp.sum(
+            use_lb.astype(I32))
+        metrics["l2_hits"] = m["l2_hits"] + jnp.sum(hit_lb.astype(I32))
+        metrics["bypasses"] = m["bypasses"] + jnp.sum(
+            byp_lb.astype(I32))
+        # one-hot over the type bins (victim_type is always a written
+        # label, in range) instead of an [N] scatter-add, which XLA:CPU
+        # serializes per element
+        n_types = m["evictions_by_type"].shape[0]
+        vt_oh = vt_lb.reshape(-1)[:, None] \
+            == jnp.arange(n_types, dtype=I32)[None, :]
+        metrics["evictions_by_type"] = m["evictions_by_type"] + jnp.sum(
+            jnp.where(vt_oh, ev_lb.reshape(-1)[:, None].astype(I32), 0),
+            axis=0)
+        st = st._replace(
+            tot_hits=st.tot_hits.at[w_sel].add(
+                jnp.sum(hit_lb.astype(I32), axis=0)),
+            tot_acc=st.tot_acc.at[w_sel].add(
+                jnp.sum(valid_lb.astype(I32), axis=0)),
+            metrics=metrics)
 
         dmax = jnp.max(jnp.where(valid_lb, t_done, -jnp.inf), axis=0)
         dmin = jnp.min(jnp.where(valid_lb, t_done, jnp.inf), axis=0)

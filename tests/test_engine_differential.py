@@ -343,14 +343,15 @@ def test_batched_observe_window_resets_fire_identically():
 # fused scan backend: bitwise-equal to the unfused engine (ISSUE 6)
 # ---------------------------------------------------------------------------
 
-def _run_backends(trace, n_warps, lanes, policies, backends, **kw0):
+def _run_backends(trace, n_warps, lanes, policies, backends,
+                  bkw="scan_backend", **kw0):
     args = (jnp.asarray(trace["lines"]), jnp.asarray(trace["pcs"]),
             jnp.asarray(trace["compute_gap"]))
     kw = dict(n_warps=n_warps, lanes=lanes, prm=PRM, engine="wavefront",
               **kw0)
     if "oracle_wtype" in trace:
         kw["oracle_types"] = jnp.asarray(trace["oracle_wtype"])
-    outs = {b: simulate_sweep(*args, policies, scan_backend=b, **kw)
+    outs = {b: simulate_sweep(*args, policies, **{bkw: b}, **kw)
             for b in backends}
     return {b: {k: np.asarray(v) for k, v in o.items()}
             for b, o in outs.items()}
@@ -445,3 +446,103 @@ def test_scan_backend_validation():
         simulate(*args, engine="wavefront", scan_backend="vector9", **kw)
     with pytest.raises(ValueError, match="only meaningful"):
         simulate(*args, engine="event", scan_backend="fused", **kw)
+
+
+# ---------------------------------------------------------------------------
+# fused cache backend: bitwise-equal to the per-lane ref pass (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", WL.WORKLOAD_NAMES)
+def test_cache_fused_bitwise_on_workload_matrix(workload):
+    """cache_backend="fused" (the auto default on CPU) must equal the
+    per-lane "ref" cache pass BIT-FOR-BIT on every metric across the
+    full 15-workload × 4-policy matrix: the one-sweep reformulation
+    computes every slot's row from lane-start state (exactly what the
+    ref scatters write) and resolves same-set conflicts last-write-wins
+    in slot order."""
+    spec = WL.WORKLOADS[workload]
+    tr = WL.generate(spec, seed=0)
+    outs = _run_backends(tr, spec.n_warps, spec.lines_per_instr,
+                         DIFF_POLICIES, ("ref", "fused"),
+                         bkw="cache_backend")
+    for k in outs["ref"]:
+        assert np.array_equal(outs["ref"][k], outs["fused"][k],
+                              equal_nan=True), k
+
+
+@pytest.mark.parametrize("spec_name", ["PHASED48", "PHASED_RECOVER48"])
+def test_cache_fused_bitwise_on_phased(spec_name):
+    """Same bitwise claim on the drifting-intensity and recovery-shaped
+    phased traces — window resets, relabeling, and EAF generation bumps
+    all land mid-run there."""
+    specs = {**TG.PHASED_SPECS, **TG.PHASED_RECOVER_SPECS}
+    spec = specs[spec_name]
+    tr = TG.generate(spec, seed=0)
+    outs = _run_backends(tr, spec.n_warps, spec.lines_per_instr,
+                         (BL.BASELINE, BL.MEDIC), ("ref", "fused"),
+                         bkw="cache_backend")
+    for k in outs["ref"]:
+        assert np.array_equal(outs["ref"][k], outs["fused"][k],
+                              equal_nan=True), k
+
+
+def test_cache_fused_bitwise_wave_of_one():
+    """A wave of one warp still aliases sets ACROSS LANES of the same
+    warp; the fused pass must stay bitwise in that degenerate shape."""
+    spec = WL.WORKLOADS["BP"]
+    tr = WL.generate(spec, seed=0)
+    outs = _run_backends(tr, spec.n_warps, spec.lines_per_instr,
+                         (BL.MEDIC,), ("ref", "fused"),
+                         bkw="cache_backend", wave_size=1)
+    for k in outs["ref"]:
+        assert np.array_equal(outs["ref"][k], outs["fused"][k],
+                              equal_nan=True), k
+
+
+def test_cache_fused_bitwise_both_backends_fused():
+    """Both passes fused at once (the shipping CPU default) must still
+    equal the double-ref engine bitwise — the two fusions compose."""
+    spec = WL.WORKLOADS["BFS"]
+    tr = WL.generate(spec, seed=0)
+    args = (jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+            jnp.asarray(tr["compute_gap"]))
+    kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM,
+              engine="wavefront")
+    ref = simulate_sweep(*args, DIFF_POLICIES, scan_backend="ref",
+                         cache_backend="ref", **kw)
+    fus = simulate_sweep(*args, DIFF_POLICIES, scan_backend="fused",
+                         cache_backend="fused", **kw)
+    for k in ref:
+        assert np.array_equal(np.asarray(ref[k]), np.asarray(fus[k]),
+                              equal_nan=True), k
+
+
+def test_cache_pallas_backend_bitwise_at_engine_level():
+    """cache_backend="pallas" (interpret-forced on CPU) through the
+    whole engine. The cache pass is integer/select arithmetic — no
+    re-associated float reductions — so unlike the timing-pass kernel
+    this one is asserted BITWISE. Kept tiny: interpret mode runs the
+    lane grid in Python."""
+    spec = dataclasses.replace(
+        TG.TraceSpec.from_workload(WL.WORKLOADS["BFS"]),
+        n_warps=12, n_instr=8)
+    tr = TG.generate(spec, seed=0)
+    outs = _run_backends(tr, spec.n_warps, spec.lines_per_instr,
+                         (BL.MEDIC,), ("ref", "pallas"),
+                         bkw="cache_backend")
+    for k in outs["ref"]:
+        assert np.array_equal(outs["ref"][k], outs["pallas"][k],
+                              equal_nan=True), k
+
+
+def test_cache_backend_validation():
+    spec = WL.WORKLOADS["BP"]
+    tr = WL.generate(spec, seed=0)
+    args = (jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+            jnp.asarray(tr["compute_gap"]))
+    kw = dict(n_warps=spec.n_warps, lanes=spec.lines_per_instr, prm=PRM,
+              pol=BL.MEDIC)
+    with pytest.raises(ValueError, match="cache_backend"):
+        simulate(*args, engine="wavefront", cache_backend="sweep9", **kw)
+    with pytest.raises(ValueError, match="only meaningful"):
+        simulate(*args, engine="event", cache_backend="fused", **kw)

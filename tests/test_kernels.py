@@ -348,3 +348,168 @@ if HAVE_HYPOTHESIS:
         args = _wave_case(rng, n, dyadic=dyadic, empty=empty)
         _assert_wave_equal(_recover(args, "ref"), _recover(args, "fused"),
                            go_dram=args[5])
+
+
+# ---------------------------------------------------------------------------
+# wavefront cache pass
+# ---------------------------------------------------------------------------
+
+def _cache_case(rng, n_warps, b, lanes, prm, pa, addr_hi=60, empty=False):
+    """One fuzzed cache-pass wave over a warmed state. The warmed tags
+    honor the engine invariant the fused backend relies on: non-(-1)
+    tags are unique within a set (a line lives in at most one way —
+    allocation only happens on miss)."""
+    from repro.core.engine.state import init_state
+    from repro.policy import ops as POL
+    sets = prm.sets
+    st = init_state(n_warps, prm)
+    pool = np.argsort(rng.random((sets, 4 * prm.ways + addr_hi)),
+                      axis=1)[:, :prm.ways]
+    tags_np = np.where(rng.random((sets, prm.ways)) < 0.25, -1, pool)
+    st = st._replace(
+        tags=jnp.asarray(tags_np, jnp.int32),
+        rrip=jnp.asarray(rng.integers(0, prm.rrip_max + 1,
+                                      (sets, prm.ways)), jnp.int32),
+        meta_type=jnp.asarray(rng.integers(0, 3, (sets, prm.ways)),
+                              jnp.int32),
+        eaf=jnp.asarray(rng.integers(0, 2, prm.eaf_bits), jnp.int32),
+        eaf_ctr=jnp.asarray(rng.integers(0, prm.eaf_capacity), jnp.int32),
+        pc_hits=jnp.asarray(rng.integers(0, 50, prm.pc_entries), jnp.int32),
+        pc_acc=jnp.asarray(rng.integers(50, 100, prm.pc_entries),
+                           jnp.int32),
+        pc_req=jnp.asarray(rng.integers(0, 100, prm.pc_entries), jnp.int32))
+    st = st._replace(clf=st.clf._replace(
+        accesses=jnp.asarray(rng.integers(0, 64, n_warps), jnp.int32),
+        hits=jnp.asarray(rng.integers(0, 32, n_warps), jnp.int32),
+        sampled=jnp.asarray(rng.integers(0, 64, n_warps), jnp.int32)))
+    w_sel = jnp.asarray(rng.choice(n_warps, b, replace=False), jnp.int32)
+    clf_b0 = jax.tree.map(lambda a: a[w_sel], st.clf)
+    tokens_b = POL.pcal_tokens(pa, n_warps)[w_sel]
+    t0 = jnp.sort(jnp.asarray(rng.uniform(0, 50, b), jnp.float32))
+    addr_lb = jnp.asarray(rng.integers(-1, addr_hi, (lanes, b)), jnp.int32)
+    pc_b = jnp.asarray(rng.integers(0, 64, b), jnp.int32)
+    owt_b = jnp.asarray(rng.integers(0, 3, b), jnp.int32)
+    slot_ok = jnp.zeros(b, bool) if empty \
+        else jnp.asarray(rng.random(b) < 0.9)
+    if empty:
+        addr_lb = jnp.full_like(addr_lb, -1)
+    return st, (clf_b0, tokens_b, t0, addr_lb, pc_b, owt_b, slot_ok)
+
+
+def _cache_run(st, args, prm, pa, backend, interpret=False):
+    from repro.kernels.cache_pass.ops import wave_cache_pass
+    return wave_cache_pass(st, *args, prm, pa, backend=backend,
+                           interpret=interpret)
+
+
+def _cache_assert_equal(a, b):
+    ra = jax.tree_util.tree_leaves_with_path(a)
+    rb = jax.tree_util.tree_leaves_with_path(b)
+    for (p, va), (_, vb) in zip(ra, rb):
+        np.testing.assert_array_equal(
+            np.asarray(va), np.asarray(vb),
+            err_msg=f"leaf {jax.tree_util.keystr(p)}")
+
+
+# (sets, wave width B, lanes, addr_hi): sets=1 collapses EVERY request
+# into one set (maximal conflict chains); sets=2 makes every conflict a
+# neighbor of the adjacent set's chain; B >= 128 engages the wide-wave
+# chronology-pointer construction; the last grid is the sparse regime
+# (aliasing only through the hash).
+_CACHE_GRIDS = [(1, 8, 16, 40), (2, 8, 16, 40), (4, 12, 5, 30),
+                (8, 160, 16, 60), (512, 200, 16, 4000)]
+
+
+@pytest.mark.parametrize("sets,b,lanes,addr_hi", _CACHE_GRIDS)
+def test_cache_pass_fused_bitwise_aliasing_grids(sets, b, lanes, addr_hi):
+    """Deterministic worst-case same-set aliasing: the fused sweep's
+    last-write-wins conflict resolution must reproduce the sequential
+    ref scan bitwise on state, classifier, and records."""
+    from repro.core import baselines as BL
+    from repro.core.engine.state import SimParams
+    from repro.policy import to_arrays
+    prm = SimParams(sets=sets)
+    rng = np.random.default_rng(sets * 1000 + b)
+    for pol in (BL.BASELINE, BL.MEDIC, BL.PCAL, BL.WBYP):
+        pa = to_arrays(pol)
+        st, args = _cache_case(rng, max(2 * b, b + 1), b, lanes, prm, pa,
+                               addr_hi=addr_hi)
+        _cache_assert_equal(_cache_run(st, args, prm, pa, "ref"),
+                            _cache_run(st, args, prm, pa, "fused"))
+
+
+def test_cache_pass_fused_bitwise_empty_wave():
+    """No valid slot: the pass must be a state no-op, bitwise, in both
+    backends (what makes the engine's dead tail waves free)."""
+    from repro.core import baselines as BL
+    from repro.core.engine.state import SimParams
+    from repro.policy import to_arrays
+    prm = SimParams(sets=8)
+    pa = to_arrays(BL.MEDIC)
+    rng = np.random.default_rng(5)
+    st, args = _cache_case(rng, 16, 6, 8, prm, pa, empty=True)
+    ref = _cache_run(st, args, prm, pa, "ref")
+    _cache_assert_equal(ref, _cache_run(st, args, prm, pa, "fused"))
+    np.testing.assert_array_equal(np.asarray(ref[0].tags),
+                                  np.asarray(st.tags))
+    np.testing.assert_array_equal(np.asarray(ref[0].pc_req),
+                                  np.asarray(st.pc_req))
+
+
+def test_cache_pass_pallas_interpret_tiny():
+    """The lane-chunked Pallas kernel (interpret mode on CPU) against
+    both jnp backends — integer/select arithmetic throughout, so the
+    claim is bitwise. ONE tiny case: interpret mode runs the lane grid
+    in Python and compiles slowly."""
+    from repro.core import baselines as BL
+    from repro.core.engine.state import SimParams
+    from repro.policy import to_arrays
+    prm = SimParams(sets=8, ways=2, eaf_bits=32, eaf_capacity=8,
+                    pc_entries=8)
+    pa = to_arrays(BL.MEDIC)
+    rng = np.random.default_rng(9)
+    st, args = _cache_case(rng, 12, 3, 4, prm, pa, addr_hi=40)
+    ref = _cache_run(st, args, prm, pa, "ref")
+    _cache_assert_equal(ref, _cache_run(st, args, prm, pa, "pallas",
+                                        interpret=True))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=hyp_st.integers(0, 2**31),
+           weights=hyp_st.tuples(*([hyp_st.integers(0, 2)] * 4)),
+           boost=hyp_st.floats(2.0, 8.0),
+           pool=hyp_st.sampled_from([8, 16, 32]))
+    def test_cache_pass_fused_hypothesis_aliasing_traces(
+            seed, weights, boost, pool):
+        """Engine-level fuzz: TraceSpecs engineered so wave members pile
+        into few cache sets (tiny set count, small shared pool, boosted
+        shared fractions, pool-heavy mixes) must stay fused == ref
+        bitwise on every reported metric. Shape is held fixed so every
+        example reuses one compiled executable per backend."""
+        from repro.core import baselines as BL
+        from repro.core import tracegen as TG
+        from repro.core.simulator import SimParams as SP, simulate_sweep
+        # weight the pool-visiting archetypes; all_miss streams past the
+        # pool so it keeps its default weight
+        mix = np.asarray((0.0,) + tuple(float(w) for w in weights),
+                         np.float64)
+        mix[3] += 1.0                          # ensure a pool-heavy floor
+        spec = TG.TraceSpec(
+            name="alias", mix=tuple(mix / mix.sum()), intensity=0.9,
+            n_warps=16, n_instr=10, lines_per_instr=8, n_pcs=6,
+            shared_pool_lines=pool, shared_boost=boost)
+        tr = TG.generate(spec, seed=seed)
+        args = (jnp.asarray(tr["lines"]), jnp.asarray(tr["pcs"]),
+                jnp.asarray(tr["compute_gap"]))
+        prm = SP(sets=4)
+        outs = {
+            be: simulate_sweep(args[0], args[1], args[2],
+                               (BL.MEDIC, BL.WBYP), n_warps=16, lanes=8,
+                               prm=prm, engine="wavefront",
+                               cache_backend=be)
+            for be in ("ref", "fused")}
+        for k in outs["ref"]:
+            assert np.array_equal(np.asarray(outs["ref"][k]),
+                                  np.asarray(outs["fused"][k]),
+                                  equal_nan=True), k

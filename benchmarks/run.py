@@ -92,6 +92,10 @@ def main() -> None:
         # adds the 1k/2k sizes)
         "phased_gap": lambda: phased_bench.phased_gap(quick=args.quick),
         "serving_ab": serving_ab.serving_ab,
+        # open-loop serving simulator A/B via the declarative registry
+        # (--only serving runs both serving benches); carries the in-run
+        # medic-vs-lru bursty p99 gate for the tier2-serving CI job
+        "serving_sim": lambda: serving_ab.serving_sim(quick=args.quick),
         "kernel_micro": kernel_micro.kernel_micro,
     }
     t00 = time.time()

@@ -1,4 +1,15 @@
-"""Altitude-B benchmark: MeDiC pool manager vs LRU on the serving engine."""
+"""Altitude-B benchmarks: MeDiC pool manager vs LRU at the serving layer.
+
+Two views of the same mechanism:
+
+  * ``serving_ab``  — the real-data-path ``ServeEngine`` A/B (reduced
+    decoder LM, KV blocks physically offloaded/restored), tiny scale;
+  * ``serving_sim`` — the vectorized open-loop serving simulator driven
+    through the declarative registry (``PAPER_SERVING(_QUICK)``):
+    arrival-process scenarios × the pool-policy ladder, per-policy
+    p99/goodput rows and the in-run MeDiC-vs-LRU tail-latency gate the
+    tier2-serving CI job asserts on.
+"""
 from __future__ import annotations
 
 from repro.configs.base import get_config
@@ -22,6 +33,7 @@ def serving_ab():
             "completed": s["completed"],
             "mean_latency_steps": round(s["mean_latency"], 1),
             "mean_ttft_steps": round(s["mean_ttft"], 1),
+            "mean_queue_wait": round(s["mean_queue_wait"], 1),
             "mean_fetch_qdelay": round(s["mean_qdelay"], 2),
             "p99_fetch_qdelay": round(s["p99_qdelay"], 2),
             "bypassed_blocks": int(s["bypassed_blocks"]),
@@ -34,4 +46,42 @@ def serving_ab():
             out["medic"]["throughput"] / max(out["lru"]["throughput"], 1e-9),
             3),
     }
+    return rows, derived
+
+
+def serving_sim(quick: bool = False):
+    """Open-loop serving A/B through ``Scenario.serving`` + the registry.
+
+    One row per (scenario, policy, seed) with the tail/goodput metrics;
+    derived numbers carry the per-scenario MeDiC-vs-LRU p99 ratios plus
+    the bursty-scenario gate value CI asserts in-run.
+    """
+    from repro.api import registry
+
+    exp = registry.PAPER_SERVING_QUICK if quick else registry.PAPER_SERVING
+    rs = exp.run()
+    rows = []
+    for r in rs.to_rows(metrics=(
+            "completed", "steps", "p99_latency", "p99_latency_censored",
+            "mean_latency", "mean_queue_wait", "p99_queue_wait",
+            "mean_ttft", "goodput", "hit_ratio", "stall_steps",
+            "bypassed_blocks", "eviction_churn", "max_concurrency")):
+        rows.append({k: (round(v, 3) if isinstance(v, float) else v)
+                     for k, v in r.items()})
+    derived = {}
+    for scen in rs.scenarios:
+        for seed in rs.seeds(scen):
+            lru = rs.value("p99_latency", scenario=scen,
+                           policy="Baseline", seed=seed)
+            med = rs.value("p99_latency", scenario=scen,
+                           policy="MeDiC", seed=seed)
+            derived[f"{scen}.s{seed}.medic_p99_over_lru"] = round(
+                med / max(lru, 1e-9), 3)
+    # the tier2-serving in-run gate: divergence-aware residency must not
+    # lose the tail on the bursty scenario
+    gs = "SERVE_BURSTY64"
+    derived["bursty_gate_medic_p99_le_lru_p99"] = bool(
+        rs.value("p99_latency", scenario=gs, policy="MeDiC", seed=0)
+        <= rs.value("p99_latency", scenario=gs, policy="Baseline", seed=0))
+    derived["wall_s"] = round(rs.wall_s, 2)
     return rows, derived

@@ -41,7 +41,9 @@ _TRACE_KEYS = ("lines", "pcs", "compute_gap", "archetype", "oracle_wtype")
 
 @dataclasses.dataclass(frozen=True)
 class PlanCall:
-    """One emitted ``simulate_sweep`` call: a (shape, engine) bucket."""
+    """One emitted ``simulate_sweep`` call: a (shape, engine) bucket.
+    Serving buckets run the (host-side, unjitted) serving simulator
+    instead; their shape is ``(-1, max_slots, n_requests)``."""
     shape: Shape                       # (n_instr, n_warps, lines_per_instr)
     engine: str
     wave_size: Optional[int]
@@ -59,6 +61,31 @@ class PlanCall:
         with equal keys share one compiled executable."""
         return (self.shape, self.flat, n_policies, self.engine,
                 self.wave_size, self.scan_backend, self.cache_backend, prm)
+
+    def execute_serving(self, exp: "Experiment") -> ResultBlock:
+        """Run the serving simulator over this bucket: every (scenario,
+        seed) request stream under every policy, metrics stacked to the
+        standard ``[P, F]`` layout. One stream is generated per entry
+        and shared across policies, so an A/B always compares on the
+        IDENTICAL arrival sequence."""
+        from repro.serving.sim import generate_serving, simulate_serving
+        t0 = time.perf_counter()
+        entries: List[Tuple[str, int]] = []
+        cols: List[List[Dict[str, float]]] = []   # [F][P] metric dicts
+        for s in self.scenarios:
+            for seed in s.seeds:
+                reqs = generate_serving(s.spec, seed)
+                entries.append((s.name, seed))
+                cols.append([simulate_serving(
+                    reqs, s.spec, policy=pol,
+                    pool_backend=exp.pool_backend)["metrics"]
+                    for pol in exp.policies])
+        metrics = {k: np.asarray(
+            [[cols[f][p][k] for f in range(len(entries))]
+             for p in range(len(exp.policies))], np.float64)
+            for k in cols[0][0]}
+        return ResultBlock(tuple(entries), metrics,
+                           time.perf_counter() - t0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +115,13 @@ class Plan:
                  f"{self.n_executables} executable(s)"]
         for c in self.calls:
             i, w, l = c.shape
-            lines.append(
-                f"  [{c.engine}] shape I={i} W={w} L={l} flat={c.flat}: "
-                + ", ".join(f"{s.name}x{s.n_seeds}" for s in c.scenarios))
+            names = ", ".join(f"{s.name}x{s.n_seeds}" for s in c.scenarios)
+            if c.engine == "serving":
+                lines.append(f"  [serving] slots={w} requests={l} "
+                             f"flat={c.flat}: {names}")
+            else:
+                lines.append(f"  [{c.engine}] shape I={i} W={w} L={l} "
+                             f"flat={c.flat}: {names}")
         return "\n".join(lines)
 
     def execute(self, keep_traces: bool = False) -> ResultSet:
@@ -98,6 +129,9 @@ class Plan:
         exp = self.experiment
         blocks: List[ResultBlock] = []
         for call in self.calls:
+            if call.engine == "serving":
+                blocks.append(call.execute_serving(exp))
+                continue
             n_instr, n_warps, lanes = call.shape
             parts = [s.materialize() for s in call.scenarios]
             # a bucket may mix constant-intensity scenarios (scalar gap
@@ -155,6 +189,9 @@ class Experiment:
     #: wavefront cache-pass backend (repro.kernels.cache_pass);
     #: "auto" = fused one-sweep on CPU, Pallas kernel on TPU
     cache_backend: str = "auto"
+    #: serving-engine pool-transaction backend (engine="serving" only);
+    #: "auto"/"fast" = vectorized access_batch, "ref" = sequential per-key
+    pool_backend: str = "auto"
     prm: SimParams = SimParams()
 
     def __post_init__(self):
@@ -176,8 +213,24 @@ class Experiment:
         if pdupes:
             raise ValueError(f"experiment {self.name!r}: duplicate policy "
                              f"names {sorted(pdupes)}")
-        validate_engine_args(self.engine, self.wave_size,
-                             self.scan_backend, self.cache_backend)
+        serving = [s.name for s in self.scenarios if s.is_serving]
+        if self.engine == "serving":
+            if len(serving) != len(self.scenarios):
+                raise ValueError(
+                    f"experiment {self.name!r}: engine='serving' takes "
+                    "only serving scenarios (Scenario.serving)")
+            from repro.serving.sim.step import POOL_BACKENDS
+            if self.pool_backend not in POOL_BACKENDS:
+                raise ValueError(
+                    f"experiment {self.name!r}: unknown pool_backend "
+                    f"{self.pool_backend!r}; choose from {POOL_BACKENDS}")
+        else:
+            if serving:
+                raise ValueError(
+                    f"experiment {self.name!r}: serving scenarios "
+                    f"{serving} need engine='serving'")
+            validate_engine_args(self.engine, self.wave_size,
+                                 self.scan_backend, self.cache_backend)
 
     def compile(self) -> Plan:
         """Bucket scenarios by trace shape; one PlanCall per bucket."""
@@ -205,5 +258,5 @@ def run(scenarios: Sequence[Scenario], policies: Sequence[Policy],
         name: str = "adhoc", keep_traces: bool = False) -> ResultSet:
     """One-shot helper: ``api.run(scenarios, policies)`` -> ResultSet."""
     return Experiment(name, tuple(scenarios), tuple(policies), engine,
-                      wave_size, scan_backend, cache_backend, prm).run(
-                          keep_traces=keep_traces)
+                      wave_size, scan_backend, cache_backend,
+                      prm=prm).run(keep_traces=keep_traces)

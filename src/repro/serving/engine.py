@@ -162,6 +162,12 @@ class ServeEngine:
         pending = sorted(requests, key=lambda r: r.arrival)
         done: List[Request] = []
         ready_at = np.zeros(self.ecfg.max_slots)
+        # a stalled slot's fetches are in flight: when they land, the
+        # delayed decode commits with the streamed data (already restored
+        # at access time) instead of re-running the residency transaction
+        # — re-accessing would re-miss bypassed blocks forever and
+        # livelock every mostly-miss sequence behind its own streaming
+        fetch_pending = np.zeros(self.ecfg.max_slots, bool)
         tokens_out = 0
         step = 0
         while (pending or any(self.slots)) and step < max_steps:
@@ -171,12 +177,17 @@ class ServeEngine:
                 if cur is None and pending and pending[0].arrival <= now:
                     self._admit(pending.pop(0), i, step)
                     ready_at[i] = now
+                    fetch_pending[i] = False
             # residency transactions for the upcoming decode
             active = np.zeros(self.ecfg.max_slots, bool)
             for i, req in enumerate(self.slots):
                 if req is None or ready_at[i] > now:
                     if req is not None:
                         req.stall_steps += 1
+                    continue
+                if fetch_pending[i]:
+                    fetch_pending[i] = False
+                    active[i] = True
                     continue
                 length = int(self.cache["len"][i]) + 1
                 keys = self._block_keys(req, min(length, self.ecfg.max_len))
@@ -192,6 +203,7 @@ class ServeEngine:
                     t_ready = max(t_ready, t)
                 if t_ready > now:
                     ready_at[i] = t_ready
+                    fetch_pending[i] = True
                     req.stall_steps += 1
                 else:
                     active[i] = True
@@ -225,9 +237,13 @@ class ServeEngine:
             step += 1
 
         snap = self.pool.snapshot()
+        in_flight = [r for r in self.slots if r is not None]
         lat = [r.finish_step - r.enqueue_step for r in done]
         ttft = [r.first_token_step - r.enqueue_step for r in done
                 if r.first_token_step >= 0]
+        # queue wait is its own metric (latency above starts at admission,
+        # so it would otherwise vanish); admitted = done + still in flight
+        qwait = [r.enqueue_step - r.arrival for r in done + in_flight]
         snap.update({
             "steps": step,
             "completed": len(done),
@@ -236,7 +252,11 @@ class ServeEngine:
             "mean_latency": float(np.mean(lat)) if lat else float("nan"),
             "p99_latency": float(np.percentile(lat, 99)) if lat else float("nan"),
             "mean_ttft": float(np.mean(ttft)) if ttft else float("nan"),
-            "stall_steps": sum(r.stall_steps for r in done),
+            "mean_queue_wait": float(np.mean(qwait)) if qwait else float("nan"),
+            "p99_queue_wait": float(np.percentile(qwait, 99)) if qwait else float("nan"),
+            # in-flight requests stall too — dropping them undercounted
+            # exactly the runs where stalls matter (truncated, congested)
+            "stall_steps": sum(r.stall_steps for r in done + in_flight),
         })
         return snap
 

@@ -43,6 +43,10 @@ import numpy as np
 from repro.core import warp_types as WT
 from repro.policy import DecisionTables, Policy, to_arrays
 
+# (slot, blk) keys packed as one int64 code for vectorized lookup; block
+# indices are bounded by max_len / block_tokens (tens), far below this
+_BLK_STRIDE = 1 << 21
+
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
@@ -76,16 +80,30 @@ class MedicPoolManager:
     vectorized clamp instead of a per-key loop.
     """
 
-    def __init__(self, cfg: PoolConfig, max_seqs: int, on_evict=None):
+    def __init__(self, cfg: PoolConfig, max_seqs: int, on_evict=None,
+                 policy: Optional[Policy] = None):
         self.cfg = cfg
         self.max_seqs = max_seqs
         self.on_evict = on_evict or (lambda key: None)
-        if cfg.policy not in POOL_POLICIES:
-            raise ValueError(f"unknown pool policy {cfg.policy!r}")
         if cfg.budget_blocks < 1:
             raise ValueError("budget_blocks must be >= 1")
+        # a Policy object (the unified engine's preset) overrides the
+        # cfg.policy string: this is how the serving simulator sweeps the
+        # full labeling ladder (LRU / MeDiC / stale / oracle) through one
+        # pool implementation
+        if policy is None:
+            if cfg.policy not in POOL_POLICIES:
+                raise ValueError(f"unknown pool policy {cfg.policy!r}")
+            policy = POOL_POLICIES[cfg.policy]
+        self.policy = policy
         self.tables = DecisionTables.from_arrays(
-            to_arrays(POOL_POLICIES[cfg.policy]), cfg.rrip_max)
+            to_arrays(policy), cfg.rrip_max)
+        # ① labeling mode + effective reclassification window: ``stale``
+        # freezes each sequence's first classified label until the slot
+        # is reset; ``oracle`` pins labels set via ``set_oracle_type``
+        self.label_mode = policy.labeling
+        self._interval = int(policy.reclass_interval
+                             or cfg.sampling_interval)
         # residency table: one row per budgeted block
         cap = cfg.budget_blocks
         self._slot = np.full(cap, -1, np.int64)    # owner seq slot (-1 free)
@@ -103,6 +121,7 @@ class MedicPoolManager:
         self.win_acc = np.zeros(max_seqs, np.int64)
         self.seq_type = np.full(max_seqs, WT.BALANCED, np.int64)
         self.ratio = np.full(max_seqs, 0.5, np.float64)
+        self._label_locked = np.zeros(max_seqs, bool)
         # two-queue transfer engine (④)
         self.hp_free = 0.0
         self.lp_free = 0.0
@@ -138,16 +157,33 @@ class MedicPoolManager:
         self.accesses[slot] += 1
         self.win_hits[slot] += hit
         self.win_acc[slot] += 1
-        if self.win_acc[slot] >= self.cfg.sampling_interval:
+        if self.win_acc[slot] >= self._interval:
             r = self.win_hits[slot] / max(self.win_acc[slot], 1)
             self.ratio[slot] = r
-            self.seq_type[slot] = WT.classify_np(
+            newt = WT.classify_np(
                 r, int(self.win_acc[slot]),
                 mostly_hit_threshold=self.cfg.mostly_hit_threshold,
                 mostly_miss_threshold=self.cfg.mostly_miss_threshold,
                 min_samples=1)
+            self._relabel(slot, newt)
             self.win_hits[slot] = 0
             self.win_acc[slot] = 0
+
+    def _relabel(self, slot: int, newt: int):
+        """Apply one window's classification under the labeling mode."""
+        if self.label_mode == "oracle":
+            return                      # pinned via set_oracle_type
+        if self.label_mode == "stale" and self._label_locked[slot]:
+            return                      # first classified label sticks
+        self.seq_type[slot] = newt
+        self._label_locked[slot] = True
+
+    def set_oracle_type(self, slot: int, stype: int):
+        """Pin the slot's label to ground truth (``label_mode="oracle"``:
+        set at admission from the request's true class; ``_observe``
+        keeps counting stats but never relabels)."""
+        self.seq_type[slot] = stype
+        self._label_locked[slot] = True
 
     def reset_slot(self, slot: int):
         """New sequence admitted into the slot: drop its blocks + counters."""
@@ -161,6 +197,7 @@ class MedicPoolManager:
         self.win_hits[slot] = self.win_acc[slot] = 0
         self.seq_type[slot] = WT.BALANCED
         self.ratio[slot] = 0.5
+        self._label_locked[slot] = False
 
     # -- the per-step residency transaction ----------------------------------
 
@@ -202,6 +239,153 @@ class MedicPoolManager:
                 continue  # streamed: not retained
             self._insert(key, int(tb.rank_by_type[stype]), stype)
         return ready, fetched
+
+    # -- batched residency transaction (one step, all active slots) ----------
+
+    def access_batch(self, owner: np.ndarray, kslot: np.ndarray,
+                     kblk: np.ndarray, now: float
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """One serving step's residency transactions for every active
+        slot at once. ``owner[q]`` is the sequence charged for access
+        ``q`` (sorted ascending — slot-major order); ``(kslot, kblk)``
+        is its residency key (shared-prefix blocks live under a
+        pseudo-slot). Returns ``(slots, ready)``: the distinct owners in
+        order and each one's fetch-ready time.
+
+        Semantics are EXACTLY the sequential reference — calling
+        ``access(owner[q], [kblk[q]], now, resident_key=...)`` for q in
+        order, the call pattern ``ServeEngine.run`` makes — but the
+        dominant all-hit traffic is handled in vectorized runs: one
+        residency lookup for the whole batch (packed-code searchsorted
+        against a step-start snapshot), one rank-promotion scatter and a
+        closed-form multi-window classifier advance per run. Only
+        segments with a miss (or whose snapshot was invalidated by a
+        same-step eviction/insertion from an earlier slot) drop to the
+        per-key path, so those interleavings stay bit-exact too.
+        """
+        owner = np.asarray(owner, np.int64)
+        kslot = np.asarray(kslot, np.int64)
+        kblk = np.asarray(kblk, np.int64)
+        n = owner.size
+        if n == 0:
+            return np.empty(0, np.int64), np.empty(0, np.float64)
+        cut = np.nonzero(np.diff(owner))[0] + 1
+        starts = np.concatenate(([0], cut))
+        ends = np.concatenate((cut, [n]))
+        seg_owner = owner[starts].copy()
+        ready = np.full(len(seg_owner), float(now))
+        # step-start residency snapshot, packed-code sorted for lookup
+        valid = np.nonzero(self._slot >= 0)[0]
+        codes = self._slot[valid] * _BLK_STRIDE + self._blk[valid]
+        order = np.argsort(codes)
+        scodes, srows = codes[order], valid[order]
+        qcodes = kslot * _BLK_STRIDE + kblk
+        if len(scodes):
+            pos = np.minimum(np.searchsorted(scodes, qcodes),
+                             len(scodes) - 1)
+            hit = scodes[pos] == qcodes
+            hit_row = np.where(hit, srows[pos], -1)
+        else:
+            hit = np.zeros(n, bool)
+            hit_row = np.full(n, -1, np.int64)
+        cum = np.concatenate(([0], np.cumsum(hit)))
+        seg_allhit = (cum[ends] - cum[starts]) == (ends - starts)
+        # keys whose residency changed since the snapshot (same-step
+        # evictions/insertions by earlier slots): code -> row or -1
+        changed: Dict[int, int] = {}
+        prev_evict = self.on_evict
+
+        def _tracking_evict(key):
+            changed[int(key[0]) * _BLK_STRIDE + int(key[1])] = -1
+            prev_evict(key)
+
+        si, n_seg = 0, len(seg_owner)
+        while si < n_seg:
+            if seg_allhit[si]:
+                sj = si
+                while sj < n_seg and seg_allhit[sj]:
+                    sj += 1
+                qs, qe = starts[si], ends[sj - 1]
+                rows = hit_row[qs:qe]
+                if changed:
+                    ch = np.fromiter(changed, np.int64, len(changed))
+                    bad = np.isin(qcodes[qs:qe], ch)
+                    if bad.any():
+                        # an earlier slot's eviction (or re-insertion of
+                        # a shared block) moved keys in this run: demote
+                        # the affected segments to the per-key path
+                        badcum = np.concatenate(([0], np.cumsum(bad)))
+                        for k in range(si, sj):
+                            b0, b1 = starts[k] - qs, ends[k] - qs
+                            if badcum[b1] > badcum[b0]:
+                                seg_allhit[k] = False
+                        continue
+                self._rank[rows] = 0
+                self._advance_hits(seg_owner[si:sj], ends[si:sj] -
+                                   starts[si:sj])
+                si = sj
+            else:
+                o = int(seg_owner[si])
+                t = float(now)
+                self.on_evict = _tracking_evict
+                try:
+                    for q in range(starts[si], ends[si]):
+                        key = (int(kslot[q]), int(kblk[q]))
+                        tq, _ = self.access(o, [int(kblk[q])], now,
+                                            resident_key=key)
+                        t = max(t, tq)
+                        row = self._row.get(key)
+                        if row is not None:
+                            changed[int(qcodes[q])] = row
+                finally:
+                    self.on_evict = prev_evict
+                ready[si] = t
+                si += 1
+        return seg_owner, ready
+
+    def _advance_hits(self, slots: np.ndarray, counts: np.ndarray):
+        """Classifier counters for ``counts[j]`` consecutive HIT observes
+        of ``slots[j]`` — the closed form of ``_observe(slot, True)``
+        repeated, including multi-window closes. ``slots`` must be
+        distinct (one segment per owner, guaranteed by the sorted-owner
+        segmentation in ``access_batch``)."""
+        iv = self._interval
+        k = np.asarray(counts, np.int64)
+        a0 = self.win_acc[slots]
+        h0 = self.win_hits[slots]
+        tot = a0 + k
+        self.hits[slots] += k
+        self.accesses[slots] += k
+        n_close = tot // iv
+        rem = tot % iv
+        closing = n_close > 0
+        if closing.any():
+            cs = slots[closing]
+            # the first closed window carries the pre-step partial
+            # counters; later ones are pure-hit (ratio 1). The LAST
+            # close sets the diagnostic ratio; label updates replay the
+            # per-window order (stale locks on the first close).
+            first_r = (h0[closing] + (iv - a0[closing])) / iv
+            last_r = np.where(n_close[closing] >= 2, 1.0, first_r)
+            thr = dict(mostly_hit_threshold=self.cfg.mostly_hit_threshold,
+                       mostly_miss_threshold=self.cfg.mostly_miss_threshold)
+            t_first = WT._ladder_np(first_r, **thr)
+            t_last = WT._ladder_np(last_r, **thr)
+            self.ratio[cs] = last_r
+            if self.label_mode == "online":
+                self.seq_type[cs] = t_last
+                self._label_locked[cs] = True
+            elif self.label_mode == "stale":
+                unlocked = ~self._label_locked[cs]
+                self.seq_type[cs[unlocked]] = t_first[unlocked]
+                self._label_locked[cs[unlocked]] = True
+            # oracle: labels pinned via set_oracle_type
+            self.win_hits[cs] = rem[closing]   # open window is all-hit
+            self.win_acc[cs] = rem[closing]
+        nc = ~closing
+        if nc.any():
+            self.win_hits[slots[nc]] = tot[nc] - (a0[nc] - h0[nc])
+            self.win_acc[slots[nc]] = tot[nc]
 
     def _insert(self, key, rank: int, stype: int):
         cfg = self.cfg

@@ -1,0 +1,372 @@
+"""Open-loop serving simulator tests: arrival processes, metamorphic
+invariants, fast==ref pool differential, and ServeEngine parity.
+
+Three layers, mirroring DESIGN.md §14:
+
+  * arrivals   — deterministic grid over the process family (seed
+                 determinism, monotonicity, realized-rate tolerance,
+                 burst/diurnal structure) plus a hypothesis fuzz of the
+                 ServingSpec space when hypothesis is installed, and a
+                 Little's-law sanity check on a long stable Poisson run;
+  * simulator  — metamorphic invariants (doubling slots under an ample
+                 budget never worsens the tail on the same stream,
+                 zero-arrival streams are a no-op, closed-loop admits in
+                 request order), the vectorized-vs-sequential pool
+                 transaction differential, and the declarative api path
+                 (validation, plan bucketing, pool_backend plumbing,
+                 the >= 2048-concurrent acceptance run);
+  * parity     — the sim replayed on the IDENTICAL generate_requests
+                 workload must match ``ServeEngine.run`` per request
+                 (enqueue / first-token / finish / stall) and per pool
+                 counter, on both pool backends.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core.tracegen.spec import trace_key
+from repro.serving.pool import POOL_POLICIES, PoolConfig
+from repro.serving.sim import (SERVING_SPECS, ServingSpec, arrival_times,
+                               from_requests, generate_serving,
+                               simulate_serving)
+from repro.serving.sim.arrivals import _unit_poisson
+
+OPEN_PROCESSES = ("poisson", "bursty", "diurnal")
+
+
+def _spec(process: str, **kw) -> ServingSpec:
+    """A small test spec; name depends only on the process so streams
+    stay comparable across shape-only changes."""
+    base = dict(name=f"T_{process.upper()}", process=process, rate=1.5,
+                n_requests=256)
+    base.update(kw)
+    return ServingSpec(**base)
+
+
+# -- arrival processes --------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+@pytest.mark.parametrize("process", OPEN_PROCESSES)
+def test_arrivals_deterministic_and_monotone(process, seed):
+    spec = _spec(process)
+    t = arrival_times(spec, seed)
+    assert t.shape == (spec.n_requests,) and t.dtype == np.float64
+    assert np.all(np.isfinite(t))
+    assert np.all(t >= 0.0)
+    assert np.all(np.diff(t) >= 0.0)
+    # bit-identical on replay, distinct across seeds
+    assert np.array_equal(t, arrival_times(spec, seed))
+    assert not np.array_equal(t, arrival_times(spec, seed + 101))
+
+
+def test_closed_process_arrives_at_zero():
+    t = arrival_times(_spec("closed"), 3)
+    assert np.array_equal(t, np.zeros(256))
+
+
+@pytest.mark.parametrize("process", OPEN_PROCESSES)
+def test_realized_rate_matches_spec(process):
+    """Bursty/diurnal warp a unit-rate process through Λ⁻¹, so the MEAN
+    rate must stay ``spec.rate`` for every process."""
+    spec = _spec(process, n_requests=4096, rate=2.5)
+    for seed in (0, 3):
+        t = arrival_times(spec, seed)
+        assert spec.n_requests / t[-1] == pytest.approx(2.5, rel=0.1)
+
+
+def test_bursty_concentrates_arrivals_in_bursts():
+    """duty=0.25 at boost=3 puts duty*boost = 75% of arrivals inside the
+    burst window of each period."""
+    spec = _spec("bursty", n_requests=4096, rate=2.0, burst_period=64.0,
+                 burst_duty=0.25, burst_boost=3.0)
+    phase = np.mod(arrival_times(spec, 0), 64.0)
+    assert np.mean(phase <= 16.0) == pytest.approx(0.75, abs=0.05)
+
+
+def test_diurnal_modulates_arrival_density():
+    """The sin>0 half-period carries (1 + 2·amp/π)/2 of the arrivals."""
+    spec = _spec("diurnal", n_requests=4096, rate=2.5,
+                 diurnal_period=128.0, diurnal_amp=0.8)
+    t = arrival_times(spec, 0)
+    high = np.sin(2.0 * np.pi * t / 128.0) > 0.0
+    assert np.mean(high) == pytest.approx(0.5 + 0.8 / np.pi, abs=0.05)
+
+
+def test_diurnal_inverse_is_consistent():
+    """The bisection inverse really inverts Λ: pushing the returned
+    times back through the integrated rate recovers the unit-rate
+    event times."""
+    spec = _spec("diurnal", n_requests=512, rate=1.7)
+    t = arrival_times(spec, 5)
+    t_unit = _unit_poisson(trace_key(spec.name, 5), 512)
+    w = 2.0 * np.pi / spec.diurnal_period
+    lam = spec.rate * (t + spec.diurnal_amp / w * (1.0 - np.cos(w * t)))
+    np.testing.assert_allclose(lam, t_unit, rtol=1e-9, atol=1e-6)
+
+
+def test_generate_serving_population_and_determinism():
+    spec = _spec("poisson", chat_frac=0.75)
+    a = generate_serving(spec, 0)
+    b = generate_serving(spec, 0)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    chat = a["prefix_id"] >= 0
+    assert np.mean(chat) == pytest.approx(0.75, abs=0.12)
+    # class-conditional attribute ranges
+    c_lo, c_hi = spec.chat_prompt
+    r_lo, r_hi = spec.rag_prompt
+    assert np.all((a["prompt_len"][chat] >= c_lo)
+                  & (a["prompt_len"][chat] < c_hi))
+    assert np.all((a["prompt_len"][~chat] >= r_lo)
+                  & (a["prompt_len"][~chat] < r_hi))
+    assert np.all(a["prefix_id"][chat] < spec.n_shared_prefixes)
+    assert np.all(a["prefix_len"][chat] == spec.shared_prefix_len)
+    assert np.all(a["prefix_id"][~chat] == -1)
+    assert np.all(a["prefix_len"][~chat] == 0)
+    d_lo, d_hi = spec.decode
+    assert np.all((a["decode_len"] >= d_lo) & (a["decode_len"] < d_hi))
+
+
+def test_request_identity_is_prefix_stable():
+    """Attributes are sub-streams indexed by request id, so the first k
+    requests are identical no matter how many follow them."""
+    a = generate_serving(_spec("poisson", n_requests=256), 0)
+    b = generate_serving(_spec("poisson", n_requests=64), 0)
+    for k in a:
+        np.testing.assert_array_equal(a[k][:64], b[k])
+
+
+# deterministic grid above always runs; hypothesis (when installed — the
+# CI image has it) fuzzes the ServingSpec space with the same checker
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_arrivals_fuzz_monotone_deterministic(data):
+        process = data.draw(st.sampled_from(OPEN_PROCESSES))
+        kw = dict(
+            rate=data.draw(st.floats(0.05, 20.0)),
+            n_requests=data.draw(st.integers(0, 300)),
+        )
+        if process == "bursty":
+            kw["burst_period"] = data.draw(st.floats(8.0, 512.0))
+            duty = data.draw(st.floats(0.05, 0.9))
+            kw["burst_duty"] = duty
+            kw["burst_boost"] = data.draw(st.floats(1.0, 1.0 / duty))
+        elif process == "diurnal":
+            kw["diurnal_period"] = data.draw(st.floats(8.0, 1024.0))
+            kw["diurnal_amp"] = data.draw(st.floats(0.0, 0.95))
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        spec = _spec(process, **kw)
+        t = arrival_times(spec, seed)
+        assert t.shape == (spec.n_requests,)
+        assert np.all(np.isfinite(t)) and np.all(t >= 0.0)
+        assert np.all(np.diff(t) >= 0.0)
+        assert np.array_equal(t, arrival_times(spec, seed))
+
+
+def test_littles_law_on_stable_poisson_run():
+    """L = λ·W on a long run-to-completion Poisson stream (discretized
+    in-system sampling vs finish−arrival latencies agree to ~3%; 10%
+    tolerance leaves slack for the step quantization)."""
+    spec = ServingSpec("T_LITTLE", process="poisson", rate=1.0,
+                       n_requests=2048, max_slots=64, budget_blocks=4096,
+                       fetch_occupancy=0.001, max_steps=8000)
+    m = simulate_serving(generate_serving(spec, 0), spec)["metrics"]
+    assert m["completed"] == 2048            # stable: nothing truncated
+    lam = m["completed"] / m["steps"]
+    assert m["mean_in_system"] == pytest.approx(
+        lam * m["mean_latency"], rel=0.1)
+
+
+# -- simulator invariants -----------------------------------------------------
+
+
+def _ample_spec(slots: int) -> ServingSpec:
+    # budget far above demand and negligible transfer occupancy: only
+    # queueing for slots changes with max_slots, which is what makes the
+    # doubling invariant a theorem rather than a tuning accident
+    return ServingSpec("T_SLOTS", process="poisson", rate=1.2,
+                       n_requests=256, max_slots=slots, budget_blocks=4096,
+                       fetch_occupancy=0.001, max_steps=8000)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_doubling_slots_never_worsens_tail(seed):
+    """Same arrival stream (the spec name keys the RNG, so slot count
+    does not perturb it), ample budget: 2x the slots must not increase
+    p99 latency."""
+    m32 = simulate_serving(generate_serving(_ample_spec(32), seed),
+                           _ample_spec(32))["metrics"]
+    m64 = simulate_serving(generate_serving(_ample_spec(64), seed),
+                           _ample_spec(64))["metrics"]
+    assert m32["completed"] == 256 and m64["completed"] == 256
+    assert m64["p99_latency"] <= m32["p99_latency"]
+    assert m64["p99_queue_wait"] <= m32["p99_queue_wait"]
+
+
+def test_zero_request_stream_is_a_no_op():
+    spec = _spec("poisson", n_requests=0)
+    out = simulate_serving(generate_serving(spec, 0), spec)
+    m = out["metrics"]
+    assert m["steps"] == 0 and m["completed"] == 0 and m["admitted"] == 0
+    assert m["tokens_out"] == 0 and m["stall_steps"] == 0
+    assert m["fetches"] == 0 and m["evictions"] == 0
+    assert np.isnan(m["mean_latency"])
+
+
+def test_closed_loop_admits_in_request_order():
+    """All arrivals at t=0: the stable queue order is request-id order,
+    so the first max_slots requests take slots 0..S-1 at step 0 and
+    admission steps are non-decreasing in request id."""
+    spec = _spec("closed", n_requests=24, max_slots=8)
+    out = simulate_serving(generate_serving(spec, 0), spec)
+    ra = out["request_arrays"]
+    assert np.all(ra["enqueue_step"][:8] == 0)
+    assert np.all(np.diff(ra["enqueue_step"]) >= 0)
+    assert np.all(ra["finish_step"] >= 0)
+
+
+@pytest.mark.parametrize("policy", [BL.BASELINE, BL.MEDIC, BL.MEDIC_STALE,
+                                    BL.MEDIC_ORACLE],
+                         ids=lambda p: p.name)
+def test_fast_pool_backend_matches_ref(policy):
+    """The vectorized access_batch transaction is bit-identical to the
+    sequential per-key reference across the whole labeling ladder."""
+    spec = dataclasses.replace(SERVING_SPECS["SERVE_BURSTY64"],
+                               n_requests=96, max_steps=1500)
+    reqs = generate_serving(spec, 0)
+    fast = simulate_serving(reqs, spec, policy=policy, pool_backend="fast")
+    ref = simulate_serving(reqs, spec, policy=policy, pool_backend="ref")
+    for k, v in fast["request_arrays"].items():
+        np.testing.assert_array_equal(v, ref["request_arrays"][k], err_msg=k)
+    for k, v in fast["pool"].items():
+        np.testing.assert_array_equal(v, ref["pool"][k], err_msg=k)
+    np.testing.assert_equal(fast["metrics"], ref["metrics"])
+
+
+# -- declarative api path -----------------------------------------------------
+
+
+def test_api_serving_validation():
+    from repro import api
+    sc = api.Scenario.serving("SERVE_POISSON64")
+    with pytest.raises(ValueError, match="need engine='serving'"):
+        api.Experiment("bad", (sc,), (BL.MEDIC,), engine="event")
+    wc = api.Scenario.workload("BFS")
+    with pytest.raises(ValueError, match="only serving scenarios"):
+        api.Experiment("bad2", (wc,), (BL.MEDIC,), engine="serving")
+    with pytest.raises(ValueError, match="pool_backend"):
+        api.Experiment("bad3", (sc,), (BL.MEDIC,), engine="serving",
+                       pool_backend="nope")
+    with pytest.raises(ValueError, match="unknown serving scenario"):
+        api.Scenario.serving("NOPE")
+    with pytest.raises(ValueError, match="n_warps"):
+        api.Scenario("bad4", SERVING_SPECS["SERVE_POISSON64"], (0,),
+                     n_warps=4)
+
+
+def test_api_serving_plan_buckets_by_shape():
+    from repro.api import registry
+    exp = registry.get("paper_serving_quick")
+    plan = exp.compile()
+    # both quick scenarios share (slots=64, requests=192): one bucket
+    assert plan.n_calls == 1
+    assert "[serving] slots=64 requests=192" in plan.describe()
+    full = registry.PAPER_SERVING.compile()
+    assert full.n_calls == 2                 # 64-slot bucket + 2k bucket
+
+
+def test_api_pool_backend_plumbs_through_experiment():
+    from repro import api
+    spec = dataclasses.replace(SERVING_SPECS["SERVE_POISSON64"],
+                               n_requests=64, max_steps=1000)
+    sc = api.Scenario.serving(spec)
+    fast = api.Experiment("t_fast", (sc,), (BL.MEDIC,), engine="serving")
+    ref = fast.with_(name="t_ref", pool_backend="ref")
+    rf, rr = fast.run(), ref.run()
+    for k in ("completed", "steps", "p99_latency", "stall_steps",
+              "fetches", "hit_ratio"):
+        assert rf.value(k, policy="MeDiC") == rr.value(k, policy="MeDiC")
+
+
+def test_api_serving_sustains_2048_in_flight():
+    """The acceptance pin: the traffic-scale spec saturates all 2048
+    slots concurrently inside one declarative api.Experiment run and
+    still completes every request."""
+    from repro import api
+    sc = api.Scenario.serving("SERVE_POISSON2K")
+    rs = api.Experiment("t_2k", (sc,), (BL.MEDIC,), engine="serving").run()
+    val = lambda k: rs.value(k, scenario="SERVE_POISSON2K",   # noqa: E731
+                             policy="MeDiC", seed=0)
+    assert val("max_concurrency") >= 2048
+    assert val("completed") == 4096
+    assert val("steps") <= 1200
+
+
+# -- ServeEngine parity -------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    from repro.configs.base import get_config
+    return get_config("qwen3_1_7b").reduced(num_layers=2)
+
+
+@pytest.mark.parametrize("policy_name", ["lru", "medic"])
+def test_sim_matches_serve_engine_per_request(tiny_cfg, policy_name):
+    """Replay the identical generate_requests workload through the real
+    engine and the simulator (both pool backends): per-request lifecycle
+    stamps and every pool counter must agree exactly."""
+    from repro.serving.engine import EngineConfig, ServeEngine
+    from repro.serving.request import ServeWorkload, generate_requests
+
+    wl = ServeWorkload(n_requests=8, arrival_rate=4.0)
+    reqs = generate_requests(wl, seed=1)
+    pc = PoolConfig(budget_blocks=32, block_tokens=16, policy=policy_name)
+    eng = ServeEngine(tiny_cfg, EngineConfig(max_slots=2, max_len=448), pc)
+    snap = eng.run(reqs, max_steps=4000)
+    assert snap["completed"] == 8            # parity on a finished run
+
+    spec = ServingSpec("T_PARITY", process="closed", n_requests=8,
+                       max_slots=2, max_len=448, block_tokens=16,
+                       budget_blocks=32, sampling_interval=32,
+                       fetch_latency=8.0, fetch_occupancy=1.0,
+                       max_steps=4000)
+    stream = from_requests(reqs)
+    for backend in ("fast", "ref"):
+        out = simulate_serving(stream, spec,
+                               policy=POOL_POLICIES[policy_name],
+                               pool_backend=backend)
+        ra = out["request_arrays"]
+        assert ra["enqueue_step"].tolist() == \
+            [r.enqueue_step for r in reqs], backend
+        assert ra["first_token_step"].tolist() == \
+            [r.first_token_step for r in reqs], backend
+        assert ra["finish_step"].tolist() == \
+            [r.finish_step for r in reqs], backend
+        assert ra["generated"].tolist() == \
+            [r.generated for r in reqs], backend
+        assert ra["stall_steps"].tolist() == \
+            [r.stall_steps for r in reqs], backend
+        pool = out["pool"]
+        assert pool["fetches"] == eng.pool.fetches
+        assert pool["bypassed_blocks"] == eng.pool.bypassed_blocks
+        np.testing.assert_array_equal(pool["hits"], eng.pool.hits)
+        np.testing.assert_array_equal(pool["accesses"], eng.pool.accesses)
+        np.testing.assert_array_equal(pool["seq_type"], eng.pool.seq_type)
+        np.testing.assert_array_equal(pool["evictions_by_type"],
+                                      eng.pool.evictions_by_type)
+        assert out["metrics"]["steps"] == snap["steps"]
+        assert out["metrics"]["completed"] == snap["completed"]
+        assert out["metrics"]["tokens_out"] == snap["tokens_out"]
+        assert out["metrics"]["stall_steps"] == snap["stall_steps"]

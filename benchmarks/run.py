@@ -61,7 +61,7 @@ def main() -> None:
 
     from benchmarks import (api_bench, engine_bench, kernel_micro,
                             paper_figures, phased_bench, roofline,
-                            serving_ab, tracegen_bench)
+                            serving_ab, sharded_bench, tracegen_bench)
     from repro.core import workloads as WL
 
     wls = ("BFS", "SSSP", "BP", "CONS") if args.quick else WL.WORKLOAD_NAMES
@@ -91,6 +91,15 @@ def main() -> None:
         # recovery-shaped PHASED_RECOVER_* (quick: 48+256 warps; full
         # adds the 1k/2k sizes)
         "phased_gap": lambda: phased_bench.phased_gap(quick=args.quick),
+        # multi-device sweep correctness + scale (--only sharded runs
+        # both): in-run unsharded-vs-sharded bitwise parity on both
+        # engines, then the 16k-warp warp-sharded stress demonstration;
+        # each reports skipped=True without >=2 devices (tier2-sharded
+        # provides 8 virtual devices via XLA_FLAGS)
+        "sharded_parity": lambda: sharded_bench.sharded_parity(
+            quick=args.quick),
+        "sharded_stress": lambda: sharded_bench.sharded_stress(
+            quick=args.quick),
         "serving_ab": serving_ab.serving_ab,
         # open-loop serving simulator A/B via the declarative registry
         # (--only serving runs both serving benches); carries the in-run

@@ -1,0 +1,142 @@
+"""Sharded-sweep benches (ISSUE 10 acceptance numbers).
+
+Two sections:
+
+  * ``sharded_parity`` — the correctness gate: the SAME experiments run
+    unsharded and sharded over the process's device mesh, compared
+    bitwise per (scenario, policy, seed, metric array). Covers the
+    event engine (policy + seed sweep axes placed via ``device_put`` of
+    the stacked inputs) and the wavefront engine (policy axis plus the
+    in-kernel sharded-warp path). The derived ``parity_*_bitwise``
+    booleans are what the tier2-sharded CI job gates on — derived
+    within ONE run, never cross-run wall-clock.
+  * ``sharded_stress`` — the scale demonstration: HAMMER16K (16384
+    warps, 4x the unsharded stress matrix's ceiling) end to end
+    through the api layer with the warp axis sharded over the full
+    mesh, then the same spec on a single device asserting the sharded
+    result stays bitwise identical at scale. Sized to one policy:
+    virtual CPU devices share the host's cores, so warp-sharding buys
+    no wall-clock locally — the point is that the placement compiles,
+    runs, and changes nothing.
+
+Both sections report ``{"skipped": True}`` when the process has fewer
+than 2 jax devices; CI provides 8 virtual devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before the
+first jax import).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.api import registry
+from repro.core import baselines as BL
+from repro.launch.mesh import make_local_mesh
+
+
+def _bitwise(rs_a, rs_b) -> bool:
+    """Every metric array of every (scenario, seed, policy) entry equal."""
+    if (rs_a.scenarios != rs_b.scenarios
+            or rs_a.policies != rs_b.policies):
+        return False
+    for name in rs_a.scenarios:
+        for seed in rs_a.seeds(name):
+            ma = rs_a.get(name, seed=seed)
+            mb = rs_b.get(name, seed=seed)
+            if set(ma) != set(mb):
+                return False
+            for k in ma:
+                if not np.array_equal(np.asarray(ma[k]),
+                                      np.asarray(mb[k]), equal_nan=True):
+                    return False
+    return True
+
+
+def _mesh_shape(n_dev: int) -> Tuple[int, int]:
+    """(data, model) over the largest power-of-two device count — the
+    sweep-axis dimensions in play are all powers of two."""
+    pow2 = 1 << (n_dev.bit_length() - 1)
+    return (2, pow2 // 2) if pow2 >= 4 else (1, pow2)
+
+
+def sharded_parity(quick: bool = False) -> Tuple[List[dict], Dict]:
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return [], {"skipped": True, "devices": n_dev,
+                    "note": "needs >=2 devices; set XLA_FLAGS="
+                            "--xla_force_host_platform_device_count=8"}
+    data, model = _mesh_shape(n_dev)
+    mesh = make_local_mesh(data, model)
+
+    # event engine: 4-policy batch over (data); seed-stack over (model)
+    wls = ("BFS", "SSSP") if quick else ("BFS", "SSSP", "BP", "CONS")
+    ev = registry.paper_fig7(wls, seeds=(0, 1), name="sharded_parity_ev"
+                             ).with_(policies=registry.STRESS_POLICIES)
+    ev_sh = ev.with_(mesh=mesh, mesh_axes=("data", "model", None))
+
+    # wavefront engine: policy axis over (data), warp axis over (model)
+    ph = ("PHASED48",) if quick else ("PHASED48", "PHASED256")
+    wf = registry.phased(ph, name="sharded_parity_wf")
+    wf_sh = wf.with_(mesh=mesh, mesh_axes=("data", None, "model"))
+
+    rows, derived = [], {"devices": n_dev,
+                         "mesh": f"data={data} model={model}"}
+    for tag, base, shard in (("event", ev, ev_sh),
+                             ("wavefront", wf, wf_sh)):
+        t0 = time.perf_counter()
+        rs0 = base.run()
+        w0 = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rs1 = shard.run()
+        w1 = time.perf_counter() - t0
+        ok = _bitwise(rs0, rs1)
+        rows.append({"engine": tag, "scenarios": len(base.scenarios),
+                     "policies": len(base.policies),
+                     "wall_unsharded_s": round(w0, 3),
+                     "wall_sharded_s": round(w1, 3),
+                     "bitwise_equal": ok})
+        derived[f"parity_{tag}_bitwise"] = ok
+        c = shard.compile().calls[0]
+        derived[f"plan_{tag}"] = (f"policy={c.policy_axes} "
+                                  f"seed={c.seed_axes} warp={c.warp_axes}")
+    return rows, derived
+
+
+def sharded_stress(quick: bool = False) -> Tuple[List[dict], Dict]:
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return [], {"skipped": True, "devices": n_dev,
+                    "note": "needs >=2 devices; set XLA_FLAGS="
+                            "--xla_force_host_platform_device_count=8"}
+    model = 1 << (n_dev.bit_length() - 1)        # warp axis gets it all
+    mesh = make_local_mesh(1, model)
+    exp = registry.stress_shard(scenarios=("HAMMER16K",),
+                                policies=(BL.MEDIC,),
+                                name="sharded_stress_16k")
+
+    t0 = time.perf_counter()
+    rs_sh = exp.with_(mesh=mesh,
+                      mesh_axes=(None, None, "model")).run()
+    wall_sh = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rs_1d = exp.run()
+    wall_1d = time.perf_counter() - t0
+
+    ipc = rs_1d.value("ipc", "HAMMER16K", policy="MeDiC")
+    match = _bitwise(rs_1d, rs_sh)
+    rows = [{"scenario": "HAMMER16K", "n_warps": 16384, "path": p,
+             "wall_s": round(w, 2), "ipc": round(ipc, 6)}
+            for p, w in ((f"warp-sharded over {model} devices", wall_sh),
+                         ("single-device", wall_1d))]
+    derived = {
+        "devices": n_dev,
+        "n_warps": 16384,
+        "completed_16k": bool(np.isfinite(ipc)),
+        "match_single_device_bitwise": match,
+        "wall_sharded_s": round(wall_sh, 2),
+        "wall_single_device_s": round(wall_1d, 2),
+    }
+    return rows, derived

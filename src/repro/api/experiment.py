@@ -30,10 +30,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import sharding as SH
 from repro.api.results import ResultBlock, ResultSet
 from repro.api.scenario import Scenario, Shape
 from repro.core.engine import (SimParams, simulate_sweep,
-                               validate_engine_args)
+                               validate_engine_args, validate_mesh_args)
 from repro.policy import Policy
 
 _TRACE_KEYS = ("lines", "pcs", "compute_gap", "archetype", "oracle_wtype")
@@ -43,13 +44,24 @@ _TRACE_KEYS = ("lines", "pcs", "compute_gap", "archetype", "oracle_wtype")
 class PlanCall:
     """One emitted ``simulate_sweep`` call: a (shape, engine) bucket.
     Serving buckets run the (host-side, unjitted) serving simulator
-    instead; their shape is ``(-1, max_slots, n_requests)``."""
+    instead; their shape is ``(-1, max_slots, n_requests)``.
+
+    ``mesh`` + the three axis fields are the bucket's RESOLVED
+    multi-device placement (``None`` everywhere on single-device plans):
+    the plan compiler applies the replication fallback per bucket —
+    a seed-stack or warp count the mesh axis does not divide resolves
+    to ``None`` here, so ``describe()`` and ``compile_key`` reflect
+    what will actually shard, not what was asked for."""
     shape: Shape                       # (n_instr, n_warps, lines_per_instr)
     engine: str
     wave_size: Optional[int]
     scan_backend: str
     cache_backend: str
     scenarios: Tuple[Scenario, ...]    # seed blocks stack in this order
+    mesh: Optional[object] = None      # jax.sharding.Mesh
+    policy_axes: Optional[object] = None
+    seed_axes: Optional[object] = None
+    warp_axes: Optional[object] = None
 
     @property
     def flat(self) -> int:
@@ -60,7 +72,9 @@ class PlanCall:
         """Everything ``simulate_sweep``'s jit cache keys on: two calls
         with equal keys share one compiled executable."""
         return (self.shape, self.flat, n_policies, self.engine,
-                self.wave_size, self.scan_backend, self.cache_backend, prm)
+                self.wave_size, self.scan_backend, self.cache_backend, prm,
+                self.mesh, self.policy_axes, self.seed_axes,
+                self.warp_axes)
 
     def execute_serving(self, exp: "Experiment") -> ResultBlock:
         """Run the serving simulator over this bucket: every (scenario,
@@ -120,8 +134,12 @@ class Plan:
                 lines.append(f"  [serving] slots={w} requests={l} "
                              f"flat={c.flat}: {names}")
             else:
+                shard = ""
+                if c.mesh is not None:
+                    shard = (f" sharded(policy={c.policy_axes} "
+                             f"seed={c.seed_axes} warp={c.warp_axes})")
                 lines.append(f"  [{c.engine}] shape I={i} W={w} L={l} "
-                             f"flat={c.flat}: {names}")
+                             f"flat={c.flat}{shard}: {names}")
         return "\n".join(lines)
 
     def execute(self, keep_traces: bool = False) -> ResultSet:
@@ -153,7 +171,9 @@ class Plan:
                 engine=call.engine, wave_size=call.wave_size,
                 scan_backend=call.scan_backend,
                 cache_backend=call.cache_backend,
-                oracle_types=np.asarray(tr["oracle_wtype"]))
+                oracle_types=np.asarray(tr["oracle_wtype"]),
+                mesh=call.mesh, policy_axes=call.policy_axes,
+                seed_axes=call.seed_axes, warp_axes=call.warp_axes)
             out = {k: np.asarray(v) for k, v in out.items()}  # [P, F, ...]
             wall = time.perf_counter() - t0
             entries = tuple((s.name, seed) for s in call.scenarios
@@ -192,6 +212,19 @@ class Experiment:
     #: serving-engine pool-transaction backend (engine="serving" only);
     #: "auto"/"fast" = vectorized access_batch, "ref" = sequential per-key
     pool_backend: str = "auto"
+    #: device mesh for multi-device sweeps (``jax.sharding.Mesh``, e.g.
+    #: ``launch.mesh.make_local_mesh``); None = single-device execution.
+    #: Every (policy, seed) cell is an independent simulation, so the
+    #: sharded run is bitwise-identical to the single-device one.
+    mesh: Optional[object] = None
+    #: (policy, seed, warp) mesh-axis assignment — which mesh axes the
+    #: stacked policy axis, the seed-stack axis and (wavefront only) the
+    #: engine-internal warp axis shard over. Entries are None, an axis
+    #: name, or a tuple of names; an axis that does not divide its
+    #: dimension falls back to replication per bucket. Defaults (when a
+    #: mesh is given) to the mesh's first two axis names for (policy,
+    #: seed) and no warp sharding.
+    mesh_axes: Optional[Tuple] = None
     prm: SimParams = SimParams()
 
     def __post_init__(self):
@@ -213,6 +246,27 @@ class Experiment:
         if pdupes:
             raise ValueError(f"experiment {self.name!r}: duplicate policy "
                              f"names {sorted(pdupes)}")
+        if self.mesh_axes is not None and self.mesh is None:
+            raise ValueError(f"experiment {self.name!r}: mesh_axes given "
+                             "without a mesh; pass mesh= as well")
+        if self.mesh is not None:
+            if self.engine == "serving":
+                raise ValueError(
+                    f"experiment {self.name!r}: engine='serving' runs "
+                    "host-side and does not take a mesh")
+            axes = self.mesh_axes
+            if axes is None:
+                names = tuple(self.mesh.axis_names)
+                axes = (names[0], names[1] if len(names) > 1 else None,
+                        None)
+            axes = tuple(axes) + (None,) * (3 - len(axes))
+            if len(axes) != 3:
+                raise ValueError(
+                    f"experiment {self.name!r}: mesh_axes must be up to "
+                    "3 entries (policy, seed, warp); got "
+                    f"{self.mesh_axes!r}")
+            object.__setattr__(self, "mesh_axes", axes)
+            validate_mesh_args(self.mesh, *axes, engine=self.engine)
         serving = [s.name for s in self.scenarios if s.is_serving]
         if self.engine == "serving":
             if len(serving) != len(self.scenarios):
@@ -233,15 +287,31 @@ class Experiment:
                                  self.scan_backend, self.cache_backend)
 
     def compile(self) -> Plan:
-        """Bucket scenarios by trace shape; one PlanCall per bucket."""
+        """Bucket scenarios by trace shape; one PlanCall per bucket.
+
+        With a mesh, each bucket's placement is resolved here (the
+        replication fallback applied against the bucket's concrete
+        policy count / seed-stack size / warp count), so the emitted
+        plan is inspectable: ``describe()`` shows exactly which axes of
+        which bucket will shard."""
         buckets: Dict[Shape, List[Scenario]] = {}
         for s in self.scenarios:
             buckets.setdefault(s.shape, []).append(s)
-        calls = tuple(
-            PlanCall(shape, self.engine, self.wave_size, self.scan_backend,
-                     self.cache_backend, tuple(scens))
-            for shape, scens in buckets.items())
-        return Plan(self, calls)
+        calls = []
+        for shape, scens in buckets.items():
+            mesh = pol_ax = seed_ax = warp_ax = None
+            if self.mesh is not None and self.engine != "serving":
+                mesh = self.mesh
+                p_want, s_want, w_want = self.mesh_axes
+                flat = sum(s.n_seeds for s in scens)
+                pol_ax = SH.resolve_axes(mesh, p_want, len(self.policies))
+                seed_ax = SH.resolve_axes(mesh, s_want, flat)
+                warp_ax = SH.resolve_axes(mesh, w_want, shape[1])
+            calls.append(
+                PlanCall(shape, self.engine, self.wave_size,
+                         self.scan_backend, self.cache_backend,
+                         tuple(scens), mesh, pol_ax, seed_ax, warp_ax))
+        return Plan(self, tuple(calls))
 
     def run(self, keep_traces: bool = False) -> ResultSet:
         return self.compile().execute(keep_traces=keep_traces)
@@ -254,9 +324,10 @@ class Experiment:
 def run(scenarios: Sequence[Scenario], policies: Sequence[Policy],
         engine: str = "event", wave_size: Optional[int] = None,
         scan_backend: str = "auto", cache_backend: str = "auto",
-        prm: SimParams = SimParams(),
+        prm: SimParams = SimParams(), mesh=None, mesh_axes=None,
         name: str = "adhoc", keep_traces: bool = False) -> ResultSet:
     """One-shot helper: ``api.run(scenarios, policies)`` -> ResultSet."""
     return Experiment(name, tuple(scenarios), tuple(policies), engine,
                       wave_size, scan_backend, cache_backend,
+                      mesh=mesh, mesh_axes=mesh_axes,
                       prm=prm).run(keep_traces=keep_traces)

@@ -74,6 +74,30 @@ def stress(scenarios=tuple(TG.STRESS_SPECS), seeds=(0,),
         STRESS_POLICIES, engine="wavefront")
 
 
+def stress_shard(scenarios=tuple(TG.SHARD_STRESS_SPECS), seeds=(0,),
+                 policies=STRESS_POLICIES,
+                 name: str = "stress_shard") -> Experiment:
+    """The 16k–64k-warp sharded-sweep stress tier (``HAMMER16K`` /
+    ``WIDE64K``) on the wavefront engine. Registered WITHOUT a mesh —
+    a ``jax.sharding.Mesh`` holds concrete devices, so it cannot live in
+    an import-time registry constant; attach one at run time, e.g.::
+
+        from repro.launch.mesh import make_local_mesh
+        rs = registry.STRESS_SHARD.with_(
+            mesh=make_local_mesh(1, 8),
+            mesh_axes=(None, None, "model")).run()
+
+    (under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` the
+    mesh is 8 virtual CPU devices — no TPU required). ``policies``
+    trims the vmapped batch: the full 2-spec × 4-policy tier is a
+    multi-hour run; ``benchmarks.sharded_bench`` demonstrates 16k
+    warps on a single policy in minutes."""
+    return Experiment(
+        name,
+        tuple(Scenario.stress(s, seeds=seeds) for s in scenarios),
+        tuple(policies), engine="wavefront")
+
+
 def phased(scenarios=tuple(TG.PHASED_SPECS), seeds=(0,),
            engine: str = "wavefront", name: str = "paper_phased"
            ) -> Experiment:
@@ -118,6 +142,7 @@ def serving(scenarios=("SERVE_POISSON64", "SERVE_BURSTY64",
 PAPER_FIG7 = paper_fig7()
 PAPER_FIG7_QUICK = paper_fig7(QUICK_WORKLOADS, name="paper_fig7_quick")
 STRESS = stress()
+STRESS_SHARD = stress_shard()
 PAPER_PHASED = phased()
 PAPER_PHASED_QUICK = phased(QUICK_PHASED, name="paper_phased_quick")
 PAPER_RECOVER = recover()
@@ -129,7 +154,7 @@ PAPER_SERVING_QUICK = serving(("SERVE_POISSON64", "SERVE_BURSTY64"),
 
 EXPERIMENTS: Dict[str, Experiment] = {
     e.name: e for e in (PAPER_FIG7, PAPER_FIG7_QUICK, STRESS,
-                        PAPER_PHASED, PAPER_PHASED_QUICK,
+                        STRESS_SHARD, PAPER_PHASED, PAPER_PHASED_QUICK,
                         PAPER_RECOVER, PAPER_RECOVER_QUICK,
                         PAPER_SERVING, PAPER_SERVING_QUICK)}
 

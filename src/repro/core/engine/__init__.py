@@ -81,13 +81,57 @@ def validate_engine_args(engine: str, wave_size: Optional[int] = None,
             f"ignore it")
 
 
+def validate_mesh_args(mesh, policy_axes=None, seed_axes=None,
+                       warp_axes=None, engine: str = "event") -> None:
+    """Front-door validation for the multi-device sweep knobs.
+
+    Mesh-axis assignments without a mesh, axis names the mesh does not
+    carry, one mesh axis claimed by two sweep axes, and warp-axis
+    sharding on an engine without a sharded-warp path all fail here with
+    a one-line ``ValueError`` — before any device placement or tracing.
+    (Divisibility is NOT validated: an axis product that does not divide
+    its dimension falls back to replication, ``sharding.resolve_axes``.)
+    """
+    from repro import sharding as SH
+    named = {"policy_axes": SH.norm_axes(policy_axes),
+             "seed_axes": SH.norm_axes(seed_axes),
+             "warp_axes": SH.norm_axes(warp_axes)}
+    if mesh is None:
+        given = [k for k, v in named.items() if v is not None]
+        if given:
+            raise ValueError(f"{', '.join(given)} given without a mesh; "
+                             "pass mesh= as well")
+        return
+    present = set(mesh.axis_names)
+    for k, axes in named.items():
+        for a in axes or ():
+            if a not in present:
+                raise ValueError(
+                    f"{k} names mesh axis {a!r} but the mesh only has "
+                    f"axes {tuple(mesh.axis_names)}")
+    claimed: dict = {}
+    for k, axes in named.items():
+        for a in axes or ():
+            if a in claimed:
+                raise ValueError(
+                    f"mesh axis {a!r} is claimed by both {claimed[a]} "
+                    f"and {k}; each sweep axis needs its own mesh axes")
+            claimed[a] = k
+    if named["warp_axes"] is not None and engine != "wavefront":
+        raise ValueError(
+            f"warp_axes={warp_axes!r} is only meaningful with "
+            f"engine='wavefront' (the sharded-warp path); "
+            f"engine={engine!r} would silently ignore it")
+
+
 def _core(engine: str, wave_size: Optional[int], scan_backend: str,
-          cache_backend: str):
+          cache_backend: str, warp_mesh=None, warp_axes=None):
     validate_engine_args(engine, wave_size, scan_backend, cache_backend)
     if engine == "event":
         return _event.simulate_core
     return partial(_wavefront.simulate_core, wave_size=wave_size,
-                   scan_backend=scan_backend, cache_backend=cache_backend)
+                   scan_backend=scan_backend, cache_backend=cache_backend,
+                   warp_mesh=warp_mesh, warp_axes=warp_axes)
 
 
 def _oracle_or_zeros(oracle_types, trace_lines, policies):
@@ -109,28 +153,34 @@ def _oracle_or_zeros(oracle_types, trace_lines, policies):
 
 @partial(jax.jit,
          static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size",
-                          "scan_backend", "cache_backend"))
+                          "scan_backend", "cache_backend", "warp_mesh",
+                          "warp_axes"))
 def _simulate_one(trace_lines, trace_pcs, compute_gap, oracle_types, pa, *,
                   n_warps: int, lanes: int, prm: SimParams,
                   engine: str = "event",
                   wave_size: Optional[int] = None,
                   scan_backend: str = "auto",
-                  cache_backend: str = "auto") -> Dict[str, Any]:
-    core = _core(engine, wave_size, scan_backend, cache_backend)
+                  cache_backend: str = "auto",
+                  warp_mesh=None, warp_axes=None) -> Dict[str, Any]:
+    core = _core(engine, wave_size, scan_backend, cache_backend,
+                 warp_mesh, warp_axes)
     return core(trace_lines, trace_pcs, compute_gap, oracle_types, pa,
                 n_warps=n_warps, lanes=lanes, prm=prm)
 
 
 @partial(jax.jit,
          static_argnames=("prm", "n_warps", "lanes", "engine", "wave_size",
-                          "scan_backend", "cache_backend"))
+                          "scan_backend", "cache_backend", "warp_mesh",
+                          "warp_axes"))
 def _simulate_batch(trace_lines, trace_pcs, compute_gap, oracle_types,
                     pa_batch, *, n_warps: int, lanes: int, prm: SimParams,
                     engine: str = "event",
                     wave_size: Optional[int] = None,
                     scan_backend: str = "auto",
-                    cache_backend: str = "auto"):
-    one = partial(_core(engine, wave_size, scan_backend, cache_backend),
+                    cache_backend: str = "auto",
+                    warp_mesh=None, warp_axes=None):
+    one = partial(_core(engine, wave_size, scan_backend, cache_backend,
+                        warp_mesh, warp_axes),
                   n_warps=n_warps, lanes=lanes, prm=prm)
     if trace_lines.ndim == 4:      # seed-stacked traces [S, I, W, L]
         over_seeds = jax.vmap(one, in_axes=(0, 0, 0, 0, None))
@@ -144,7 +194,8 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
              lanes: int, prm: SimParams, pol: Policy,
              engine: str = "event", wave_size: Optional[int] = None,
              scan_backend: str = "auto", cache_backend: str = "auto",
-             oracle_types=None) -> Dict[str, Any]:
+             oracle_types=None, mesh=None, warp_axes=None
+             ) -> Dict[str, Any]:
     """Run one workload under one policy.
 
     ``engine="event"`` (default) is the exact discrete-event reference:
@@ -171,15 +222,26 @@ def simulate(trace_lines, trace_pcs, compute_gap, *, n_warps: int,
     optional i32[I, W] ground-truth labels — required (pass the trace's
     ``oracle_wtype``) when the policy's labeling mode is "oracle".
     Returns metrics dict (all jnp arrays).
+
+    ``mesh`` + ``warp_axes`` enable the wavefront engine's sharded-warp
+    path: the warp axis of the trace arrays and the per-warp machine
+    state is constrained to those mesh axes (replication fallback when
+    the axis product does not divide ``n_warps``). Output-identical to
+    the unsharded run — sharding is placement, never semantics.
     """
     validate_engine_args(engine, wave_size, scan_backend, cache_backend)
+    validate_mesh_args(mesh, warp_axes=warp_axes, engine=engine)
+    from repro import sharding as SH
+    w_res = SH.resolve_axes(mesh, warp_axes, n_warps)
     return _simulate_one(trace_lines, trace_pcs, compute_gap,
                          _oracle_or_zeros(oracle_types, trace_lines,
                                           (pol,)),
                          to_arrays(pol), n_warps=n_warps, lanes=lanes,
                          prm=prm, engine=engine, wave_size=wave_size,
                          scan_backend=scan_backend,
-                         cache_backend=cache_backend)
+                         cache_backend=cache_backend,
+                         warp_mesh=mesh if w_res is not None else None,
+                         warp_axes=w_res)
 
 
 def simulate_sweep(trace_lines, trace_pcs, compute_gap,
@@ -188,7 +250,8 @@ def simulate_sweep(trace_lines, trace_pcs, compute_gap,
                    wave_size: Optional[int] = None,
                    scan_backend: str = "auto",
                    cache_backend: str = "auto",
-                   oracle_types=None) -> Dict[str, Any]:
+                   oracle_types=None, mesh=None, policy_axes=None,
+                   seed_axes=None, warp_axes=None) -> Dict[str, Any]:
     """Run a whole policy sweep in ONE jitted, vmapped call.
 
     trace_lines may be [I, W, L] (one workload instance — outputs get a
@@ -201,22 +264,50 @@ def simulate_sweep(trace_lines, trace_pcs, compute_gap,
     only read by policies with labeling="oracle" — passing it lets one
     vmapped sweep compare oracle / online / stale labelings.
 
+    Multi-device placement (``mesh`` + any of the three axis knobs):
+    ``policy_axes`` shards the stacked policy axis of the traced
+    ``PolicyArrays``, ``seed_axes`` the seed-stack axis of the trace
+    arrays, and ``warp_axes`` the warp axis INSIDE the wavefront engine
+    (trace storage + per-warp machine state). Every (policy, seed) cell
+    of the vmapped sweep is an independent simulation, so batch-axis
+    sharding is pure data parallelism and the outputs are bitwise
+    identical to the unsharded call (pinned by
+    tests/test_sharded_sweep.py). Any axis whose mesh product does not
+    divide its dimension falls back to replication.
+
     Metrics match per-policy `simulate` calls bit-for-bit on either
     engine (the parity is enforced by tests/test_policy_engine.py).
     """
     validate_engine_args(engine, wave_size, scan_backend, cache_backend)
+    validate_mesh_args(mesh, policy_axes, seed_axes, warp_axes, engine)
     pa = stack_policies(policies)
-    return _simulate_batch(trace_lines, trace_pcs, compute_gap,
-                           _oracle_or_zeros(oracle_types, trace_lines,
-                                            policies),
+    oracle = _oracle_or_zeros(oracle_types, trace_lines, policies)
+    w_res = None
+    if mesh is not None:
+        from repro import sharding as SH
+        p_res = SH.resolve_axes(mesh, policy_axes, len(policies))
+        pa = jax.tree.map(lambda a: SH.put_leading(a, mesh, p_res), pa)
+        s_res = None
+        if jnp.ndim(trace_lines) == 4:     # seed-stacked [S, I, W, L]
+            s_res = SH.resolve_axes(mesh, seed_axes,
+                                    trace_lines.shape[0])
+        trace_lines = SH.put_leading(trace_lines, mesh, s_res)
+        trace_pcs = SH.put_leading(trace_pcs, mesh, s_res)
+        oracle = SH.put_leading(oracle, mesh, s_res)
+        gap_res = s_res if jnp.ndim(compute_gap) >= 1 else None
+        compute_gap = SH.put_leading(compute_gap, mesh, gap_res)
+        w_res = SH.resolve_axes(mesh, warp_axes, n_warps)
+    return _simulate_batch(trace_lines, trace_pcs, compute_gap, oracle,
                            pa, n_warps=n_warps, lanes=lanes, prm=prm,
                            engine=engine, wave_size=wave_size,
                            scan_backend=scan_backend,
-                           cache_backend=cache_backend)
+                           cache_backend=cache_backend,
+                           warp_mesh=mesh if w_res is not None else None,
+                           warp_axes=w_res)
 
 
 __all__ = [
     "CACHE_BACKENDS", "ENGINES", "N_QBINS", "SCAN_BACKENDS", "SimParams",
     "SimState", "init_state", "simulate", "simulate_sweep",
-    "validate_engine_args",
+    "validate_engine_args", "validate_mesh_args",
 ]

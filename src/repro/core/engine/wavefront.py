@@ -71,6 +71,7 @@ from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.engine import request as REQ
 from repro.core.engine.state import SimParams, SimState, init_state
@@ -91,6 +92,33 @@ F32 = jnp.float32
 I32 = jnp.int32
 
 _NEG = -jnp.inf
+
+
+def _warp_constraint(mesh, axes, dim: int):
+    """Sharding constraint placing mesh ``axes`` on dimension ``dim``
+    (the warp axis) of an array; identity without a mesh. Composes with
+    vmap — the batch rule inserts the vmapped dim as replicated, so the
+    same constraint serves the policy/seed-vmapped sweep."""
+    if mesh is None or axes is None:
+        return lambda x: x
+
+    def constrain(x):
+        spec = [None] * x.ndim
+        spec[dim] = axes
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*spec)))
+    return constrain
+
+
+def _replicate_constraint(mesh):
+    """Constraint gathering an array to full replication — applied to
+    the per-warp state right before ``finalize_outputs`` so the final
+    float reductions (e.g. the IPC sum over warps) run over a replicated
+    array in the exact single-device order (bitwise parity)."""
+    if mesh is None:
+        return lambda x: x
+    return lambda x: jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*([None] * x.ndim))))
 
 
 def default_wave_size(n_warps: int) -> int:
@@ -209,7 +237,8 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
                   pa: PolicyArrays, *, n_warps: int, lanes: int,
                   prm: SimParams, wave_size: Optional[int] = None,
                   scan_backend: str = "auto",
-                  cache_backend: str = "auto") -> Dict[str, Any]:
+                  cache_backend: str = "auto",
+                  warp_mesh=None, warp_axes=None) -> Dict[str, Any]:
     """One workload × one policy on the wavefront engine. Vmappable.
 
     ``compute_gap`` is a scalar or f32[I]; ``oracle_types`` i32[I, W]
@@ -219,8 +248,24 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
     ``"ref"`` is the respective pre-fusion path kept as the unfused side
     of the in-run perf A/B; every other backend is output-identical to
     it (bitwise for ``"fused"``, the CPU default under ``"auto"``), so
-    the two knobs compose freely."""
+    the two knobs compose freely.
+
+    ``warp_mesh`` + ``warp_axes`` (both static, pre-resolved by the
+    ``simulate``/``simulate_sweep`` front door) enable the sharded-warp
+    path: the trace storage arrays ([W, I, L] — the memory that grows
+    with the population) and the per-warp machine state (ready/ptr
+    clocks, classifier rows, lifetime counters, the [I, W] ratio trace)
+    are constrained to shard their warp axis over those mesh axes, so a
+    16k–64k-warp stress spec spreads across the mesh instead of sitting
+    on one device. The wave gathers/scatters cross shards (XLA inserts
+    the collectives); the per-wave [B]-sized compute is replicated, and
+    the state is gathered back to full replication before
+    ``finalize_outputs`` so the closing float reductions keep the exact
+    single-device operand order — the whole path is bitwise-identical
+    to the unsharded engine (pinned by tests/test_sharded_sweep.py)."""
     n_instr = trace_lines.shape[0]
+    shard_w0 = _warp_constraint(warp_mesh, warp_axes, 0)
+    shard_w1 = _warp_constraint(warp_mesh, warp_axes, 1)
     B = max(1, min(wave_size or default_wave_size(n_warps), n_warps))
     # wave-count CAP (the while_loop usually exits earlier, see module
     # docstring): phase 1 (>= B warps active) services B instructions
@@ -234,15 +279,18 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
              or CPASS.resolve_backend(cache_backend) != "ref")
     tokens = POL.pcal_tokens(pa, n_warps)
 
-    lines_wi = jnp.swapaxes(trace_lines, 0, 1)      # [W, I, L]
-    pcs_wi = jnp.swapaxes(trace_pcs, 0, 1)          # [W, I]
-    oracle_wi = jnp.swapaxes(oracle_types, 0, 1)    # [W, I]
+    lines_wi = shard_w0(jnp.swapaxes(trace_lines, 0, 1))  # [W, I, L]
+    pcs_wi = shard_w0(jnp.swapaxes(trace_pcs, 0, 1))      # [W, I]
+    oracle_wi = shard_w0(jnp.swapaxes(oracle_types, 0, 1))  # [W, I]
 
     st0 = init_state(n_warps, prm)
+    st0 = st0._replace(clf=jax.tree.map(shard_w0, st0.clf),
+                       tot_hits=shard_w0(st0.tot_hits),
+                       tot_acc=shard_w0(st0.tot_acc))
     an0 = init_anchors(prm)
-    ready0 = jnp.zeros((n_warps,), F32)
-    ptr0 = jnp.zeros((n_warps,), I32)
-    ratio0 = jnp.zeros((n_instr, n_warps), F32)
+    ready0 = shard_w0(jnp.zeros((n_warps,), F32))
+    ptr0 = shard_w0(jnp.zeros((n_warps,), I32))
+    ratio0 = shard_w1(jnp.zeros((n_instr, n_warps), F32))
 
     def wave_step(carry):
         st, an, ready, ptr, ratio_t, k = carry
@@ -323,7 +371,14 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
         # Fig 4 snapshot: sampled ratio after each serviced instruction
         ratio_t = ratio_t.at[i_sel, w_ok].set(st.clf.ratio[w_sel],
                                               mode="drop")
-        return (st, an, ready, ptr, ratio_t, k + 1)
+        # pin the loop-carried warp-axis sharding (no-ops unsharded):
+        # without the constraint GSPMD may resolve the scattered-into
+        # carries to a different layout each iteration
+        st = st._replace(clf=jax.tree.map(shard_w0, st.clf),
+                         tot_hits=shard_w0(st.tot_hits),
+                         tot_acc=shard_w0(st.tot_acc))
+        return (st, an, shard_w0(ready), shard_w0(ptr),
+                shard_w1(ratio_t), k + 1)
 
     def wave_pending(carry):
         _, _, _, ptr, _, k = carry
@@ -333,5 +388,12 @@ def simulate_core(trace_lines, trace_pcs, compute_gap, oracle_types,
         wave_pending, wave_step,
         (st0, an0, ready0, ptr0, ratio0, jnp.zeros((), I32)))
 
-    return REQ.finalize_outputs(st, ready, ratio_t, compute_gap,
+    # gather the per-warp state back to replication before the closing
+    # reductions — jnp.sum over a sharded axis would reduce shard-local
+    # partials first, changing the float accumulation order vs the
+    # single-device engine
+    rep = _replicate_constraint(warp_mesh)
+    st = st._replace(clf=jax.tree.map(rep, st.clf),
+                     tot_hits=rep(st.tot_hits), tot_acc=rep(st.tot_acc))
+    return REQ.finalize_outputs(st, rep(ready), rep(ratio_t), compute_gap,
                                 n_instr=n_instr, n_warps=n_warps, prm=prm)

@@ -28,11 +28,12 @@ from repro.core.tracegen.spec import (ARCHETYPES, AddressLayout, Phase,
                                       compile_schedule, lower, lowered_gap,
                                       phase_of_instr, trace_key)
 from repro.core.tracegen.stress import (PHASED_RECOVER_SPECS, PHASED_SPECS,
-                                        STRESS_SPECS)
+                                        SHARD_STRESS_SPECS, STRESS_SPECS)
 
 __all__ = [
     "ARCHETYPES", "AddressLayout", "Phase", "TraceSpec", "WarpParams",
     "compile_schedule", "lower", "lowered_gap", "phase_of_instr",
     "trace_key", "generate", "generate_batch", "generate_ref",
-    "PHASED_RECOVER_SPECS", "PHASED_SPECS", "STRESS_SPECS",
+    "PHASED_RECOVER_SPECS", "PHASED_SPECS", "SHARD_STRESS_SPECS",
+    "STRESS_SPECS",
 ]

@@ -43,6 +43,25 @@ STRESS_SPECS: Dict[str, TraceSpec] = {s.name: s for s in [
 STRESS_NAMES = tuple(STRESS_SPECS)
 
 # ---------------------------------------------------------------------------
+# Sharded-sweep stress tier (ISSUE 10): populations one to two orders
+# beyond the 4k ceiling above, in the wide-warp spirit of the Dynamic
+# Warp Resizing configs. Kept OUT of ``STRESS_SPECS`` so the default
+# stress matrix (registry.STRESS, tier2-engine CI budgets) is unchanged
+# — these sizes are meant for the wavefront engine's sharded-warp path
+# on a device mesh (``Experiment(mesh=..., mesh_axes=(..., ..., axis))``;
+# an 8-virtual-device CPU mesh suffices, see DESIGN.md §15). Both warp
+# counts are powers of two so every 2^k-sized mesh axis divides them.
+# ---------------------------------------------------------------------------
+
+SHARD_STRESS_SPECS: Dict[str, TraceSpec] = {s.name: s for s in [
+    TraceSpec("HAMMER16K", mix=_HAMMER_MIX, intensity=1.0, n_warps=16384),
+    TraceSpec("WIDE64K", mix=(0.05, 0.25, 0.10, 0.35, 0.25),
+              intensity=0.95, n_warps=65536),
+]}
+
+SHARD_STRESS_NAMES = tuple(SHARD_STRESS_SPECS)
+
+# ---------------------------------------------------------------------------
 # PHASED family (ISSUE 5): drifting-regime schedules for the online
 # warp-reclassification story. Unlike PHASE2K (whose warps flip once at
 # the midpoint), these specs swing the whole population's hit-ratio

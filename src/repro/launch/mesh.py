@@ -21,5 +21,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over however many (host) devices exist — for tests."""
     n = data * model
+    avail = len(jax.devices())
+    if n > avail:
+        raise ValueError(
+            f"make_local_mesh(data={data}, model={model}) needs {n} "
+            f"device(s) but only {avail} are available; lower the mesh "
+            "or start the process with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "(must be set before the first jax import)")
     devs = np.asarray(jax.devices()[:n]).reshape(data, model)
     return Mesh(devs, ("data", "model"))

@@ -91,7 +91,12 @@ def spec_for(logical: Sequence[Optional[str]],
 
     A logical axis is left unsharded when (a) it has no rule, (b) its mesh
     axes are already used by an earlier dimension of this tensor, or (c) the
-    dimension size is not divisible by the mesh-axis product.
+    dimension size is not divisible by the mesh-axis product. Mesh axes of
+    size 1 carry no parallelism: they resolve to ``None`` WITHOUT being
+    consumed, so a (1, N) mesh hands its only real axis to the first
+    dimension that can actually use it (a size-1 assignment used to be
+    kept — ``dim % 1 == 0`` — and marked used, starving later dimensions
+    of the same tensor on meshes where that axis is larger).
     """
     assert len(logical) == len(shape), (logical, shape)
     used: set = set()
@@ -103,12 +108,12 @@ def spec_for(logical: Sequence[Optional[str]],
             continue
         if isinstance(axes, str):
             axes = (axes,)
-        axes = tuple(a for a in axes if a not in used)
+        axes = tuple(a for a in axes
+                     if a not in used and mesh.shape[a] > 1)
         if not axes:
             out.append(None)
             continue
-        size = _mesh_axis_size(mesh, axes)
-        if size == 1 or dim % size != 0:
+        if dim % _mesh_axis_size(mesh, axes) != 0:
             # partial fallback: try a prefix of the axes tuple
             while axes and (dim % _mesh_axis_size(mesh, axes) != 0):
                 axes = axes[:-1]
@@ -194,11 +199,71 @@ def current_rules() -> Optional[Dict[str, MeshAxes]]:
 
 def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     """Constrain an activation's sharding by logical axis names (no-op
-    without an ambient sharding context)."""
-    if _CTX.mesh is None or len(_CTX.mesh.devices) <= 1:
+    without an ambient sharding context). The trivial-mesh check uses
+    ``mesh.size`` (total device count): ``len(mesh.devices)`` only
+    measures the FIRST dimension of the 2-D device ndarray, so a (1, N)
+    mesh looked single-device and every constraint silently no-opped."""
+    if _CTX.mesh is None or _CTX.mesh.size <= 1:
         return x
     spec = spec_for(logical, x.shape, _CTX.mesh, _CTX.rules)
     return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Sweep-axis placement: the plan compiler (repro.api) and simulate_sweep
+# shard the stacked policy / seed / warp axes of a sweep over a device
+# mesh. These helpers implement the shared resolution contract: a size-1
+# mesh axis never shards, and an axis product that does not divide the
+# dimension falls back to replication (never an error) — so the same
+# Experiment runs unchanged on a 1-device box and an 8-device mesh.
+# ---------------------------------------------------------------------------
+
+def norm_axes(axes: MeshAxes) -> Optional[Tuple[str, ...]]:
+    """None | "name" | ("a", "b") -> None | tuple of names."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+def resolve_axes(mesh: Optional[Mesh], axes: MeshAxes,
+                 dim: int) -> MeshAxes:
+    """The mesh axes that actually shard a dimension of size ``dim``:
+    size-1 mesh axes are dropped, and if the remaining axis product does
+    not divide ``dim`` the whole assignment resolves to ``None``
+    (replication fallback — sharding must never change which problems
+    are expressible)."""
+    if mesh is None:
+        return None
+    axes = norm_axes(axes)
+    if axes is None:
+        return None
+    axes = tuple(a for a in axes if mesh.shape[a] > 1)
+    if not axes or dim % _mesh_axis_size(mesh, axes) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def leading_sharding(mesh: Mesh, axes: MeshAxes,
+                     rank: int) -> NamedSharding:
+    """NamedSharding placing (pre-resolved) ``axes`` on dim 0 of a
+    rank-``rank`` array, everything else replicated. ``axes=None`` is
+    full replication (still a committed placement on ``mesh``)."""
+    if axes is None or rank == 0:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(axes, *([None] * (rank - 1))))
+
+
+def put_leading(x, mesh: Optional[Mesh], axes: MeshAxes):
+    """``device_put`` an array with its leading dim sharded over
+    ``axes`` (already resolved; ``None`` replicates). No-op without a
+    mesh."""
+    if mesh is None:
+        return x
+    import jax.numpy as jnp
+    x = jnp.asarray(x)
+    return jax.device_put(x, leading_sharding(mesh, axes, x.ndim))
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
